@@ -1,0 +1,5 @@
+"""Architecture configs: one module per assigned architecture + paper profiles."""
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, input_specs
+from repro.configs.registry import get_config, list_archs
+
+__all__ = ["ArchConfig", "SHAPES", "ShapeSpec", "input_specs", "get_config", "list_archs"]

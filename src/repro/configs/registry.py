@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` -> ArchConfig.
+
+Modules are imported lazily so that importing the registry never pulls in
+every architecture's dependencies.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+
+# arch id -> module holding CONFIG
+_MODULES: dict[str, str] = {
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "musicgen-medium": "repro.configs.musicgen_medium",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+}
+
+_cache: dict[str, ArchConfig] = {}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES.keys())
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(
+            f"unknown architecture {name!r}; known: {', '.join(_MODULES)}"
+        )
+    if name not in _cache:
+        mod = importlib.import_module(_MODULES[name])
+        _cache[name] = mod.CONFIG
+    return _cache[name]

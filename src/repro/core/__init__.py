@@ -1,0 +1,17 @@
+"""DTO-EE control plane: the paper's primary contribution.
+
+Topology + M/D/1-PS queueing + exterior-point penalty + the Omega/Delta
+backward recursion + DTO-R / DTO-O / DTO-EE (Algorithms 1-3) + baselines
+(CF, BF, NGTO, GA) + the discrete-event simulator that measures them.
+"""
+from repro.core.types import (
+    BERT_PROFILE,
+    DtoHyperParams,
+    ModelProfile,
+    RESNET101_PROFILE,
+    Topology,
+)
+
+__all__ = [
+    "BERT_PROFILE", "DtoHyperParams", "ModelProfile", "RESNET101_PROFILE", "Topology",
+]

@@ -1,0 +1,286 @@
+"""DTO-EE: distributed joint optimization of task offloading and early-exit
+confidence thresholds (paper Algorithms 1-3).
+
+The per-round message passing (DTO-R + DTO-O) is fully vectorized JAX and
+jit-compiled once per topology; the discrete threshold moves (Alg. 3 lines
+5-8) are host-side table lookups, matching the paper's split between the
+continuous offloading update and the discrete threshold grid.
+
+Faithful distributed semantics: arrival estimates (phi) and gradient info
+(Omega) each propagate ONE stage per communication round — receivers use the
+offloaders' previous-round RURs, offloaders use the receivers' previous-round
+Omega (stale by one round), exactly like the RUR/RUS exchange.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradients, penalty, queueing
+from repro.core.thresholds import ExitProfile, threshold_step
+from repro.core.types import DtoHyperParams, ModelProfile, Topology
+
+
+class RoundCarry(NamedTuple):
+    """Traced per-round state of the message passing."""
+
+    p: jnp.ndarray  # [E] offloading probabilities
+    phi: jnp.ndarray  # [N] arrival-rate estimates (tasks/s)
+    lam: jnp.ndarray  # [N] required compute (GFLOP/s)
+    omega: jnp.ndarray  # [N] gradient info from each node's last DTO-O run
+
+
+@dataclasses.dataclass
+class DtoState:
+    """Full algorithm state across a configuration-update phase."""
+
+    carry: RoundCarry
+    thresholds: np.ndarray  # one per early-exit branch (discrete grid)
+    stage_remaining: np.ndarray  # I_h for stages 0..H
+    accuracy: float
+    round: int = 0
+
+
+@dataclasses.dataclass
+class PhaseResult:
+    state: DtoState
+    delay_history: np.ndarray
+    objective_history: np.ndarray
+    accuracy_history: np.ndarray
+    rounds_run: int
+
+
+def uniform_strategy(topo: Topology) -> jnp.ndarray:
+    """p_{i,j}^0 = 1/|L_i| (Alg. 3 line 1)."""
+    deg = np.maximum(topo.out_degree(), 1)
+    return jnp.asarray(1.0 / deg[topo.edge_src], jnp.float32)
+
+
+def eq19_update(
+    p: jnp.ndarray, delta: jnp.ndarray, topo: Topology, tau_p: float | jnp.ndarray
+) -> jnp.ndarray:
+    """The Eq. 19 move: shift tau_p of off-minimum mass onto argmin-Delta.
+
+    p_j   <- (1 - tau_p) p_j          for j != j*
+    p_j*  <- p_j* + tau_p sum_{j!=j*} p_j  ==  p_j* + tau_p (1 - p_j*)
+    """
+    src = topo.edge_src
+    n = topo.num_nodes
+    e = topo.num_edges
+    dmin = jax.ops.segment_min(delta, src, num_segments=n)
+    at_min = delta <= dmin[src] + 0.0
+    # first-occurrence tie-break for j*
+    idx = jnp.where(at_min, jnp.arange(e), e)
+    star_idx = jax.ops.segment_min(idx, src, num_segments=n)
+    is_star = jnp.arange(e) == star_idx[src]
+    p_new = jnp.where(is_star, p + tau_p * (1.0 - p), (1.0 - tau_p) * p)
+    # float32 drift guard: renormalize per source
+    tot = jax.ops.segment_sum(p_new, src, num_segments=n)
+    return p_new / jnp.maximum(tot[src], 1e-12)
+
+
+def make_round_step(
+    topo: Topology, profile: ModelProfile, hyper: DtoHyperParams
+) -> Callable[[RoundCarry, jnp.ndarray], tuple[RoundCarry, jnp.ndarray]]:
+    """Build the jitted synchronous round: DTO-R (Alg. 1) then DTO-O (Alg. 2).
+
+    Returns fn(carry, I_node) -> (carry', delta).
+    """
+
+    @jax.jit
+    def round_step(carry: RoundCarry, I_node: jnp.ndarray, tau_p: jnp.ndarray):
+        # --- DTO-R: receivers process RURs -> (lam, phi), respond RUS ------
+        phi_new, lam_new = queueing.one_round_flows(
+            carry.p, carry.phi, topo, profile, I_node
+        )
+        # --- DTO-O: offloaders process RUSs (stale omega), update strategy -
+        delta = gradients.delta_edges(
+            carry.p, topo, profile, lam_new, carry.omega, hyper
+        )
+        omega_new = gradients.omega_from_delta(carry.p, topo, I_node, delta)
+        p_new = eq19_update(carry.p, delta, topo, tau_p)
+        return RoundCarry(p=p_new, phi=phi_new, lam=lam_new, omega=omega_new), delta
+
+    return round_step
+
+
+def evaluate_strategy(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+    hyper: DtoHyperParams,
+) -> tuple[float, float, bool]:
+    """(T, R, stable) at exact steady-state flows — the analytic scoreboard."""
+    phi, lam = queueing.steady_state_flows(p, topo, profile, I_node)
+    t = queueing.average_response_delay(p, topo, profile, I_node, phi, lam)
+    n = penalty.penalty(topo, lam, hyper.penalty_k, hyper.penalty_eps)
+    stable = queueing.is_stable(topo, lam)
+    return float(t), float(t + n), bool(stable)
+
+
+def init_state(
+    topo: Topology,
+    profile: ModelProfile,
+    exit_profile: ExitProfile,
+    initial_thresholds: np.ndarray | None = None,
+    p0: jnp.ndarray | None = None,
+) -> DtoState:
+    thresholds = (
+        np.asarray(initial_thresholds, np.float64)
+        if initial_thresholds is not None
+        else np.full(exit_profile.num_early_branches, 0.8)
+    )
+    ev = exit_profile.evaluate(thresholds)
+    p = p0 if p0 is not None else uniform_strategy(topo)
+    n = topo.num_nodes
+    carry = RoundCarry(
+        p=p,
+        phi=jnp.asarray(topo.phi_ext, jnp.float32),
+        lam=jnp.zeros(n, jnp.float32),
+        omega=jnp.zeros(n, jnp.float32),
+    )
+    return DtoState(
+        carry=carry,
+        thresholds=thresholds,
+        stage_remaining=ev.stage_remaining,
+        accuracy=ev.accuracy,
+    )
+
+
+def run_configuration_phase(
+    topo: Topology,
+    profile: ModelProfile,
+    exit_profile: ExitProfile,
+    hyper: DtoHyperParams,
+    state: DtoState | None = None,
+    adapt_thresholds: bool = True,
+    round_step=None,
+    tau_p: float | None = None,
+) -> PhaseResult:
+    """Algorithm 3: n rounds of concurrent DTO-R/DTO-O; every m rounds, the
+    cyclically-selected stage's exit branch tries a +/- tau_c threshold move.
+
+    ``tau_p`` overrides the hyper step size for this phase (solve() decays
+    it across phases — Frank-Wolfe-style diminishing steps to converge past
+    the O(tau_p) oscillation band of the fixed-step Eq. 19 dynamics)."""
+    H = profile.num_stages
+    state = state or init_state(topo, profile, exit_profile)
+    round_step = round_step or make_round_step(topo, profile, hyper)
+    tau_now = jnp.asarray(hyper.tau_p if tau_p is None else tau_p, jnp.float32)
+
+    # branch lookup: stage -> early-branch index
+    stage_to_branch = {s: b for b, s in enumerate(exit_profile.branch_stage[:-1])}
+    total_phi = float(topo.phi_ext.sum())
+
+    delays, objectives, accuracies = [], [], []
+    carry = state.carry
+    thresholds = state.thresholds.copy()
+    stage_remaining = state.stage_remaining.copy()
+    accuracy = state.accuracy
+
+    for t in range(hyper.rounds):
+        I_node = jnp.asarray(stage_remaining, jnp.float32)[
+            jnp.asarray(topo.node_stage)
+        ]
+        carry, _delta = round_step(carry, I_node, tau_now)
+
+        # ---- Alg. 3 lines 4-8: cyclic threshold adjustment ----------------
+        if adapt_thresholds and t % hyper.threshold_every == 0:
+            h = (t // hyper.threshold_every) % H + 1  # 1-indexed stage
+            if h in stage_to_branch:
+                b = stage_to_branch[h]
+                nodes = topo.nodes_at_stage(h)
+                phi_np = np.asarray(carry.phi)[nodes]
+                omega_np = np.asarray(carry.omega)[nodes]
+                decision = threshold_step(
+                    exit_profile,
+                    thresholds,
+                    b,
+                    phi_np,
+                    omega_np,
+                    total_phi,
+                    hyper,
+                )
+                if decision.changed:
+                    thresholds = decision.thresholds
+                    stage_remaining = decision.stage_remaining
+                    accuracy = decision.accuracy
+
+        if (t % 5 == 0) or t == hyper.rounds - 1:
+            I_node_now = jnp.asarray(stage_remaining, jnp.float32)[
+                jnp.asarray(topo.node_stage)
+            ]
+            t_now, r_now, _ = evaluate_strategy(
+                carry.p, topo, profile, I_node_now, hyper
+            )
+            delays.append(t_now)
+            objectives.append(r_now)
+            accuracies.append(accuracy)
+
+    final = DtoState(
+        carry=carry,
+        thresholds=thresholds,
+        stage_remaining=stage_remaining,
+        accuracy=accuracy,
+        round=state.round + hyper.rounds,
+    )
+    return PhaseResult(
+        state=final,
+        delay_history=np.asarray(delays),
+        objective_history=np.asarray(objectives),
+        accuracy_history=np.asarray(accuracies),
+        rounds_run=hyper.rounds,
+    )
+
+
+def solve(
+    topo: Topology,
+    profile: ModelProfile,
+    exit_profile: ExitProfile,
+    hyper: DtoHyperParams | None = None,
+    max_phases: int = 8,
+    tol: float = 1e-4,
+    adapt_thresholds: bool = True,
+    tau_decay: float = 0.6,
+    tau_floor: float = 0.01,
+) -> PhaseResult:
+    """Run configuration phases until R(P) stops improving (convergence per
+    §3.5: R(P^t) is monotone decreasing and bounded below).
+
+    The per-phase step size decays geometrically: the fixed-step Eq. 19
+    dynamics oscillate in an O(tau_p) band around the convex optimum
+    (the update is a Frank-Wolfe step toward the argmin-Delta vertex), so
+    diminishing steps recover convergence to the interior optimum."""
+    hyper = hyper or DtoHyperParams()
+    round_step = make_round_step(topo, profile, hyper)
+    state = None
+    last: PhaseResult | None = None
+    prev_obj = np.inf
+    tau = hyper.tau_p
+    for _ in range(max_phases):
+        last = run_configuration_phase(
+            topo,
+            profile,
+            exit_profile,
+            hyper,
+            state=state,
+            adapt_thresholds=adapt_thresholds,
+            round_step=round_step,
+            tau_p=tau,
+        )
+        state = last.state
+        obj = float(last.objective_history[-1])
+        # stop only once the step size has annealed AND progress stalled —
+        # fixed-tau oscillation would otherwise trigger a premature break
+        if tau <= tau_floor and abs(prev_obj - obj) <= tol * max(abs(prev_obj), 1.0):
+            break
+        prev_obj = obj
+        tau = max(tau * tau_decay, tau_floor)
+    assert last is not None
+    return last

@@ -1,0 +1,107 @@
+"""Repulsive factors Delta (Eq. 15) and gradient info Omega (Eqs. 14, 16).
+
+Two flavors:
+  * ``delta_edges`` — per-edge Delta given the receivers' (lam, Omega), i.e.
+    exactly what a DTO-O offloader computes from received RUS messages.
+  * ``backward_recursion`` — the centralized oracle that runs the recursion
+    to a fixed point over stages; used by tests (Lemma 1 / Eq. 22 checks)
+    and by one-shot planners.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queueing
+from repro.core.types import DtoHyperParams, ModelProfile, Topology
+
+_BIG = 1e8  # repulsive factor of an unstable receiver (on top of the penalty)
+
+
+def delta_edges(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    lam: jnp.ndarray,
+    omega: jnp.ndarray,
+    hyper: DtoHyperParams,
+) -> jnp.ndarray:
+    """Delta_{i,j} per edge (Eq. 15) from receiver-side state (lam, omega).
+
+    Delta_ij = mu_j a/(mu_j-lam_j)^2 + beta/r_ij + Omega_j
+               + 2*K*Phi * max(0, a*(lam_j - mu_j + eps))
+    """
+    dst = topo.edge_dst
+    alpha_n = jnp.asarray(queueing.alpha_per_node(topo, profile), jnp.float32)
+    beta_e = jnp.asarray(queueing.beta_per_edge(topo, profile), jnp.float32)
+    mu = jnp.asarray(np.where(np.isinf(topo.mu), 1e30, topo.mu), jnp.float32)
+    total_phi = float(topo.phi_ext.sum())
+
+    mu_d = mu[dst]
+    lam_d = lam[dst]
+    a_d = alpha_n[dst]
+    gap = mu_d - lam_d
+    stable = gap > 0
+    congestion = jnp.where(stable, mu_d * a_d / jnp.where(stable, gap, 1.0) ** 2, _BIG)
+    transmission = beta_e / jnp.asarray(topo.edge_rate, jnp.float32)
+    pen = 2.0 * hyper.penalty_k * total_phi * jnp.maximum(
+        0.0, a_d * (lam_d - mu_d + hyper.penalty_eps)
+    )
+    return congestion + transmission + omega[dst] + pen
+
+
+def omega_from_delta(
+    p: jnp.ndarray,
+    topo: Topology,
+    I_node: jnp.ndarray,
+    delta: jnp.ndarray,
+) -> jnp.ndarray:
+    """Omega_i = I_i * sum_{j in L_i} p_ij * Delta_ij (Eq. 16); 0 at stage H."""
+    contrib = p * delta
+    omega = jax.ops.segment_sum(contrib, topo.edge_src, num_segments=topo.num_nodes)
+    omega = omega * I_node
+    is_last = jnp.asarray(topo.node_stage == topo.num_stages)
+    return jnp.where(is_last, 0.0, omega)
+
+
+def backward_recursion(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+    lam: jnp.ndarray,
+    hyper: DtoHyperParams,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact (Delta, Omega) by sweeping stages H-1 .. 0 (centralized oracle)."""
+    H = topo.num_stages
+    src_stage = topo.node_stage[topo.edge_src]  # static numpy
+    omega = jnp.zeros(topo.num_nodes, jnp.float32)
+    delta = jnp.zeros(topo.num_edges, jnp.float32)
+    for h in range(H - 1, -1, -1):
+        d_all = delta_edges(p, topo, profile, lam, omega, hyper)
+        sel = jnp.asarray((src_stage == h).astype(np.float32))
+        delta = delta + d_all * sel
+        omega_h = omega_from_delta(p, topo, I_node, d_all * sel)
+        at_h = jnp.asarray(topo.node_stage == h)
+        omega = jnp.where(at_h, omega_h, omega)
+    return delta, omega
+
+
+def analytic_gradient(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+    hyper: DtoHyperParams,
+) -> jnp.ndarray:
+    """dR/dp_ij = (phi_i * I_i / Phi) * Delta_ij (paper Eq. 22), at steady state.
+
+    Used as the oracle in Lemma-1 property tests against jax.grad.
+    """
+    phi, lam = queueing.steady_state_flows(p, topo, profile, I_node)
+    delta, _ = backward_recursion(p, topo, profile, I_node, lam, hyper)
+    total_phi = float(topo.phi_ext.sum())
+    src = topo.edge_src
+    return phi[src] * I_node[src] / total_phi * delta

@@ -1,0 +1,36 @@
+"""Exterior-point penalty (paper Eq. 11) and the penalized objective R(P)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import queueing
+from repro.core.types import DtoHyperParams, ModelProfile, Topology
+
+
+def penalty(
+    topo: Topology,
+    lam: jnp.ndarray,
+    k: float,
+    eps: float,
+) -> jnp.ndarray:
+    """N(P) = K * sum_j max(0, lam_j - mu_j + eps)^2  over ESs (Eq. 11)."""
+    mu = jnp.asarray(np.where(np.isinf(topo.mu), 1e30, topo.mu), jnp.float32)
+    viol = jnp.maximum(0.0, lam - mu + eps)
+    viol = jnp.where(jnp.asarray(topo.node_stage > 0), viol, 0.0)
+    return k * jnp.sum(viol**2)
+
+
+def objective_r(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+    hyper: DtoHyperParams,
+) -> jnp.ndarray:
+    """R(P) = T + N(P) at exact steady-state flows (problem P2)."""
+    phi, lam = queueing.steady_state_flows(p, topo, profile, I_node)
+    t = queueing.average_response_delay(p, topo, profile, I_node, phi, lam)
+    n = penalty(topo, lam, hyper.penalty_k, hyper.penalty_eps)
+    return t + n

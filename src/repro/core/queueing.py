@@ -1,0 +1,143 @@
+"""M/D/1-PS queueing model of the staged edge network (paper §2.3-§2.4).
+
+All functions are pure JAX (jit-compatible); the topology's integer arrays
+are static (closed over / passed as numpy), probabilities and rates are
+traced.  Node-indexed remaining ratios ``I_node[v]`` carry the per-stage
+remaining ratio I_h of v's stage (EDs: 1.0).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelProfile, Topology
+
+# A delay stand-in for an unstable queue (lambda >= mu).  Finite so that
+# gradients stay well-defined; the exterior penalty term is what actually
+# steers the optimizer out of the infeasible region.
+UNSTABLE_DELAY = 1e6
+
+
+def node_remaining_ratio(topo: Topology, stage_remaining: jnp.ndarray) -> jnp.ndarray:
+    """Broadcast per-stage remaining ratios I_h to nodes.
+
+    ``stage_remaining`` has length H+1 indexed by stage (entry 0 == 1.0 for
+    EDs; entry h == I_h).
+    """
+    return stage_remaining[topo.node_stage]
+
+
+def alpha_per_node(topo: Topology, profile: ModelProfile) -> np.ndarray:
+    """alpha_h of each node's sub-model (EDs: 0 — they do not compute)."""
+    alpha = np.concatenate([[0.0], np.asarray(profile.alpha, np.float64)])
+    return alpha[topo.node_stage]
+
+
+def beta_per_edge(topo: Topology, profile: ModelProfile) -> np.ndarray:
+    """beta of the data shipped over each edge == input size of the dst stage."""
+    beta = np.concatenate([[0.0], np.asarray(profile.beta, np.float64)])
+    return beta[topo.node_stage[topo.edge_dst]]
+
+
+def steady_state_flows(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact steady-state (phi, lam) via stage-by-stage propagation (Eqs. 3, 5).
+
+    Returns:
+      phi[N]: task arrival rate per node (tasks/s).
+      lam[N]: required computing resources per node (GFLOP/s), phi * alpha.
+    """
+    H = topo.num_stages
+    alpha_n = jnp.asarray(alpha_per_node(topo, profile), jnp.float32)
+    phi = jnp.asarray(topo.phi_ext, jnp.float32)
+    src, dst = topo.edge_src, topo.edge_dst
+    src_stage = topo.node_stage[src]  # static numpy
+    for h in range(0, H):  # propagate across the h -> h+1 boundary
+        sel = jnp.asarray((src_stage == h).astype(np.float32))
+        contrib = p * phi[src] * I_node[src] * sel
+        inflow = jax.ops.segment_sum(contrib, dst, num_segments=topo.num_nodes)
+        phi = jnp.where(jnp.asarray(topo.node_stage == h + 1), inflow, phi)
+    lam = phi * alpha_n
+    return phi, lam
+
+
+def one_round_flows(
+    p: jnp.ndarray,
+    phi_prev: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One synchronous RUR sweep: receivers recompute (phi, lam) from the
+    offloaders' *previous-round* arrival estimates (Alg. 1 lines 1-4).
+
+    This is the faithful distributed semantics — arrival information
+    propagates one stage per communication round.
+    """
+    alpha_n = jnp.asarray(alpha_per_node(topo, profile), jnp.float32)
+    src, dst = topo.edge_src, topo.edge_dst
+    contrib = p * phi_prev[src] * I_node[src]
+    inflow = jax.ops.segment_sum(contrib, dst, num_segments=topo.num_nodes)
+    is_es = jnp.asarray(topo.node_stage > 0)
+    phi = jnp.where(is_es, inflow, jnp.asarray(topo.phi_ext, jnp.float32))
+    lam = phi * alpha_n
+    return phi, lam
+
+
+def compute_delay_per_node(topo: Topology, profile: ModelProfile, lam: jnp.ndarray) -> jnp.ndarray:
+    """M/D/1-PS sojourn time per subtask on each ES (Eq. 6): alpha/(mu-lam)."""
+    alpha_n = jnp.asarray(alpha_per_node(topo, profile), jnp.float32)
+    mu = jnp.asarray(np.where(np.isinf(topo.mu), 1e30, topo.mu), jnp.float32)
+    gap = mu - lam
+    stable = gap > 0
+    delay = jnp.where(stable, alpha_n / jnp.where(stable, gap, 1.0), UNSTABLE_DELAY)
+    return jnp.where(jnp.asarray(topo.node_stage > 0), delay, 0.0)
+
+
+def transmission_delay_per_edge(topo: Topology, profile: ModelProfile) -> np.ndarray:
+    """T^cm per edge (Eq. 4): beta_{h+1} / r_{i,j}.  Static given the topology."""
+    return beta_per_edge(topo, profile) / topo.edge_rate
+
+
+def average_response_delay(
+    p: jnp.ndarray,
+    topo: Topology,
+    profile: ModelProfile,
+    I_node: jnp.ndarray,
+    phi: jnp.ndarray,
+    lam: jnp.ndarray,
+) -> jnp.ndarray:
+    """System mean response delay T (Eq. 8).
+
+    T = (1/Phi) * sum_j [ lam_j/(mu_j - lam_j) + sum_{i in V_j} phi_ij * T^cm_ij ]
+    """
+    mu = jnp.asarray(np.where(np.isinf(topo.mu), 1e30, topo.mu), jnp.float32)
+    gap = mu - lam
+    stable = gap > 0
+    queue_term = jnp.where(stable, lam / jnp.where(stable, gap, 1.0), lam * UNSTABLE_DELAY)
+    queue_term = jnp.where(jnp.asarray(topo.node_stage > 0), queue_term, 0.0)
+
+    t_cm = jnp.asarray(transmission_delay_per_edge(topo, profile), jnp.float32)
+    phi_edge = p * phi[topo.edge_src] * I_node[topo.edge_src]
+    total_phi = jnp.asarray(topo.phi_ext.sum(), jnp.float32)
+    return (jnp.sum(queue_term) + jnp.sum(phi_edge * t_cm)) / total_phi
+
+
+def is_stable(topo: Topology, lam: jnp.ndarray, eps: float = 0.0) -> jnp.ndarray:
+    """True iff every ES satisfies lam < mu - eps (P1's first constraint)."""
+    mu = jnp.asarray(np.where(np.isinf(topo.mu), 1e30, topo.mu), jnp.float32)
+    ok = lam < mu - eps
+    return jnp.all(jnp.where(jnp.asarray(topo.node_stage > 0), ok, True))
+
+
+def system_utilization(topo: Topology, lam: jnp.ndarray) -> jnp.ndarray:
+    """max_j lam_j / mu_j over ESs — headline congestion metric."""
+    mu = jnp.asarray(np.where(np.isinf(topo.mu), 1e30, topo.mu), jnp.float32)
+    rho = lam / mu
+    return jnp.max(jnp.where(jnp.asarray(topo.node_stage > 0), rho, 0.0))

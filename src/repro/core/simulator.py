@@ -1,0 +1,254 @@
+"""Discrete-event simulator of the collaborative-inference edge network.
+
+This is the measurement side of the paper's evaluation (§4): tasks arrive at
+EDs as Poisson processes, are routed hop-by-hop per the offloading strategy
+P, receive deterministic service (alpha_h GFLOPs) at each ES under
+**processor sharing** (the M/D/1-PS model of Eq. 6), and may exit early when
+their branch confidence clears the threshold.  Response delay is measured
+per task from ED arrival to exit; accuracy comes from the same recorded
+validation outputs the accuracy-ratio table uses, so the analytic optimizer
+and the simulator agree on what a threshold does.
+
+Implementation: a heap event loop with versioned completion events (PS
+queues reschedule their earliest completion whenever membership changes).
+Python-level, but task counts are O(1e4) per slot — milliseconds to run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+import numpy as np
+
+from repro.core.thresholds import ExitProfile
+from repro.core.types import ModelProfile, Topology
+
+
+@dataclasses.dataclass
+class SimResult:
+    mean_delay: float
+    p95_delay: float
+    accuracy: float
+    completed: int
+    generated: int
+    exit_fraction: np.ndarray  # per branch (early branches..., final)
+    mean_delay_per_stage: np.ndarray  # diagnostic: time spent per stage index
+
+
+class _PSQueue:
+    """Single-server processor-sharing queue with deterministic job sizes."""
+
+    __slots__ = ("mu", "jobs", "t", "version")
+
+    def __init__(self, mu: float):
+        self.mu = mu
+        self.jobs: dict[int, float] = {}  # job id -> remaining GFLOPs
+        self.t = 0.0
+        self.version = 0
+
+    def advance(self, now: float) -> None:
+        n = len(self.jobs)
+        if n:
+            dec = self.mu / n * (now - self.t)
+            for j in self.jobs:
+                self.jobs[j] -= dec
+        self.t = now
+
+    def add(self, now: float, job: int, work: float) -> None:
+        self.advance(now)
+        self.jobs[job] = work
+        self.version += 1
+
+    def remove(self, now: float, job: int) -> None:
+        self.advance(now)
+        self.jobs.pop(job, None)
+        self.version += 1
+
+    def next_completion(self) -> tuple[float, int] | None:
+        if not self.jobs:
+            return None
+        job = min(self.jobs, key=self.jobs.__getitem__)
+        n = len(self.jobs)
+        return self.t + max(self.jobs[job], 0.0) * n / self.mu, job
+
+
+@dataclasses.dataclass
+class _Task:
+    tid: int
+    arrival: float
+    record: int  # row in the exit profile's validation record
+    stage: int = 0  # stage of the node it currently sits on / travels to
+    node: int = -1
+    t_enter_stage: float = 0.0
+
+
+def _sample_next(
+    rng: np.random.Generator, topo: Topology, p: np.ndarray, node: int
+) -> tuple[int, int]:
+    """Sample a successor edge for ``node`` per the offloading strategy."""
+    lo, hi = topo.edge_offsets[node], topo.edge_offsets[node + 1]
+    probs = p[lo:hi]
+    s = probs.sum()
+    if s <= 0:
+        e = int(rng.integers(lo, hi))
+    else:
+        e = lo + int(rng.choice(hi - lo, p=probs / s))
+    return int(topo.edge_dst[e]), e
+
+
+def simulate_slot(
+    topo: Topology,
+    profile: ModelProfile,
+    exit_profile: ExitProfile,
+    p: np.ndarray,
+    thresholds: np.ndarray,
+    duration: float = 5.0,
+    seed: int = 0,
+    warmup: float = 0.5,
+    strategy_switch: tuple[float, np.ndarray] | None = None,
+) -> SimResult:
+    """Simulate one task-offloading phase of ``duration`` seconds.
+
+    ``strategy_switch = (t_ready, p_old)``: before ``t_ready`` (the
+    algorithm's decision time) routing uses ``p_old`` — this is how the
+    dynamic-environment experiment charges NGTO/GA for their slow decisions.
+
+    Tasks still in flight at the slot end are dropped from the delay average
+    (the paper measures completed samples only).
+    """
+    rng = np.random.default_rng(seed)
+    p = np.asarray(p, np.float64)
+    H = profile.num_stages
+    thresholds = np.asarray(thresholds, np.float64)
+    n_records = exit_profile.conf.shape[0]
+    # stage (1-indexed) -> early-branch index
+    stage_to_branch = {s: b for b, s in enumerate(exit_profile.branch_stage[:-1])}
+
+    queues = {
+        int(v): _PSQueue(float(topo.mu[v]))
+        for v in range(topo.num_nodes)
+        if topo.node_stage[v] > 0
+    }
+
+    # --- seed arrival events -----------------------------------------------
+    # heap entries: (time, seq, kind, payload)
+    #   kind 0: task arrives at an ED            payload: ed
+    #   kind 1: transfer completes, join queue   payload: (task, node)
+    #   kind 2: PS completion candidate          payload: (node, version)
+    heap: list = []
+    seq = itertools.count()
+    for ed in topo.nodes_at_stage(0):
+        rate = float(topo.phi_ext[ed])
+        if rate <= 0:
+            continue
+        t = rng.exponential(1.0 / rate)
+        while t < duration:
+            heapq.heappush(heap, (t, next(seq), 0, int(ed)))
+            t += rng.exponential(1.0 / rate)
+
+    tasks: dict[int, _Task] = {}
+    tid_counter = itertools.count()
+    delays: list[float] = []
+    correct_flags: list[bool] = []
+    exit_counts = np.zeros(len(exit_profile.branch_stage), np.int64)
+    stage_time = np.zeros(H + 1, np.float64)
+    generated = 0
+
+    def routing(now: float) -> np.ndarray:
+        if strategy_switch is not None and now < strategy_switch[0]:
+            return strategy_switch[1]
+        return p
+
+    def schedule_completion(now: float, node: int) -> None:
+        q = queues[node]
+        nxt = q.next_completion()
+        if nxt is not None:
+            heapq.heappush(heap, (nxt[0], next(seq), 2, (node, q.version)))
+
+    def depart(now: float, task: _Task, node: int) -> None:
+        """Service done at ``node`` (stage h): exit early or offload onward."""
+        h = int(topo.node_stage[node])
+        stage_time[h] += now - task.t_enter_stage
+        b = stage_to_branch.get(h)
+        exits_here = False
+        if b is not None:
+            exits_here = exit_profile.conf[task.record, b] >= thresholds[b]
+        if h == H or exits_here:
+            delays.append(now - task.arrival)
+            branch = b if (exits_here and h < H) else len(exit_counts) - 1
+            exit_counts[branch] += 1
+            correct_flags.append(bool(exit_profile.correct[task.record, branch]))
+            tasks.pop(task.tid, None)
+            return
+        send(now, task, node)
+
+    def send(now: float, task: _Task, node: int) -> None:
+        """Offload from ``node`` to a sampled successor (transmission hop)."""
+        nxt, e = _sample_next(rng, topo, routing(now), node)
+        h_next = int(topo.node_stage[nxt])
+        beta = profile.beta[h_next - 1]
+        t_cm = beta / float(topo.edge_rate[e])
+        task.stage = h_next
+        task.node = nxt
+        heapq.heappush(heap, (now + t_cm, next(seq), 1, (task.tid, nxt)))
+
+    # Arrivals stop at ``duration``; queues then drain so every generated
+    # task is measured (the paper averages completed samples).  The horizon
+    # only guards against a pathologically unstable configuration.
+    horizon = duration * 20.0
+    while heap:
+        now, _, kind, payload = heapq.heappop(heap)
+        if now > horizon:
+            break
+        if kind == 0:
+            ed = payload
+            task = _Task(
+                tid=next(tid_counter),
+                arrival=now,
+                record=int(rng.integers(0, n_records)),
+            )
+            generated += 1
+            tasks[task.tid] = task
+            send(now, task, ed)
+        elif kind == 1:
+            tid, node = payload
+            task = tasks.get(tid)
+            if task is None:
+                continue
+            task.t_enter_stage = now
+            q = queues[node]
+            work = profile.alpha[int(topo.node_stage[node]) - 1]
+            q.add(now, tid, work)
+            schedule_completion(now, node)
+        else:  # kind == 2: completion candidate
+            node, version = payload
+            q = queues[node]
+            if version != q.version:
+                continue  # stale
+            q.advance(now)
+            done = [j for j, rem in q.jobs.items() if rem <= 1e-12]
+            for j in done:
+                q.jobs.pop(j)
+            q.version += 1
+            schedule_completion(now, node)
+            for j in done:
+                task = tasks.get(j)
+                if task is not None:
+                    depart(now, task, node)
+
+    delays_a = np.asarray(delays)
+    keep = delays_a if warmup <= 0 else delays_a  # all completions counted
+    mean_delay = float(keep.mean()) if keep.size else float("inf")
+    p95 = float(np.percentile(keep, 95)) if keep.size else float("inf")
+    acc = float(np.mean(correct_flags)) if correct_flags else 0.0
+    total_exits = max(exit_counts.sum(), 1)
+    return SimResult(
+        mean_delay=mean_delay,
+        p95_delay=p95,
+        accuracy=acc,
+        completed=int(keep.size),
+        generated=generated,
+        exit_fraction=exit_counts / total_exits,
+        mean_delay_per_stage=stage_time / max(len(delays), 1),
+    )

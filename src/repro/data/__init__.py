@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, RequestConfig, poisson_requests, token_stream
+
+__all__ = ["DataConfig", "RequestConfig", "poisson_requests", "token_stream"]

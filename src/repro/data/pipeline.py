@@ -1,0 +1,99 @@
+"""Synthetic shard-aware data pipeline + Poisson request generator.
+
+Training: an infinite deterministic token stream (seeded, reproducible
+across restarts — the checkpoint records the step, the pipeline reseeds
+from it, so resume is bit-exact without storing cursor state).  The batch
+is produced already sharded over the mesh's batch axes via
+``jax.make_array_from_callback`` when a mesh is installed.
+
+Serving: Poisson arrivals of classification/prompt requests (the paper's
+task model), with prompt lengths drawn from a lognormal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    batch_size: int = 8
+    seq_len: int = 512
+    seed: int = 0
+
+
+def _batch_for_step(cfg: ArchConfig, dcfg: DataConfig, step: int) -> dict:
+    """Deterministic synthetic LM batch for a given step (host-side numpy)."""
+    rng = np.random.default_rng((dcfg.seed, step))
+    B, S = dcfg.batch_size, dcfg.seq_len
+    if cfg.frontend == "embeds":
+        embeds = rng.standard_normal((B, S, cfg.d_model)).astype(np.float32) * 0.02
+        labels = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+        return {"embeds": embeds, "labels": labels}
+    # Markov-ish stream so the LM loss has learnable structure
+    base = rng.integers(0, cfg.vocab_size, size=(B, S)).astype(np.int32)
+    shifted = np.roll(base, 1, axis=1)
+    mix = rng.random((B, S)) < 0.5
+    tokens = np.where(mix, base, (shifted * 31 + 7) % cfg.vocab_size).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1).astype(np.int32)
+    labels[:, -1] = -1  # mask the wrap-around position
+    return {"tokens": tokens, "labels": labels}
+
+
+def token_stream(
+    cfg: ArchConfig,
+    dcfg: DataConfig,
+    start_step: int = 0,
+    mesh: Mesh | None = None,
+) -> Iterator[dict]:
+    """Infinite stream of batches, device-put with batch sharding if a mesh
+    is given (data arrives sharded; no host-side global concat)."""
+    step = start_step
+    batch_spec = None
+    if mesh is not None:
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        batch_spec = P(axes if len(axes) > 1 else axes[0])
+    while True:
+        host = _batch_for_step(cfg, dcfg, step)
+        if mesh is None:
+            yield {k: jnp.asarray(v) for k, v in host.items()}
+        else:
+            out = {}
+            for k, v in host.items():
+                sh = NamedSharding(mesh, P(*([batch_spec[0]] + [None] * (v.ndim - 1))))
+                out[k] = jax.make_array_from_callback(
+                    v.shape, sh, lambda idx, v=v: v[idx]
+                )
+            yield out
+        step += 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestConfig:
+    arrival_rate: float = 20.0  # tasks/s across the system
+    mean_prompt_len: int = 64
+    sigma: float = 0.4
+    seed: int = 0
+
+
+def poisson_requests(
+    cfg: ArchConfig, rcfg: RequestConfig, duration: float
+) -> list[tuple[float, np.ndarray]]:
+    """[(arrival_time, prompt_tokens)] over ``duration`` seconds."""
+    rng = np.random.default_rng(rcfg.seed)
+    out = []
+    t = rng.exponential(1.0 / rcfg.arrival_rate)
+    while t < duration:
+        n = max(2, int(rng.lognormal(np.log(rcfg.mean_prompt_len), rcfg.sigma)))
+        prompt = rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+        out.append((float(t), prompt))
+        t += rng.exponential(1.0 / rcfg.arrival_rate)
+    return out

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the data-plane hot spots.
+
+Three kernels (DESIGN.md §5), each with a pure-jnp oracle in ref.py and a
+dispatching wrapper in ops.py:
+
+  flash_attention   — prefill attention, online softmax over KV blocks
+  decode_attention  — one query vs. a long KV cache (flash-decode)
+  exit_confidence   — the paper-specific head: fused (max softmax, argmax)
+                      over a vocab-blocked matmul, never materializing the
+                      [batch, vocab] logits in HBM
+"""

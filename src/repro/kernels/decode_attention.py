@@ -1,0 +1,144 @@
+"""Pallas TPU flash-decode: one query token vs. a long KV cache.
+
+Decode attention is memory-bound (arithmetic intensity ~1 FLOP/byte: each
+cached (k, v) element is read once per step), so the kernel's job is to
+stream the KV cache HBM -> VMEM at full bandwidth while keeping the online
+softmax state in registers/VMEM:
+
+  * grid = (batch, kv_heads, kv_blocks); last axis sequential, carrying
+    (m, l, acc) scratch across the cache walk.
+  * all ``groups`` q heads of a kv head are processed together — the score
+    matmul is [groups, hd] x [hd, block_k], amortizing each streamed KV
+    block over the whole GQA group (the same reuse trick MQA serving uses).
+  * per-row validity comes from ``lengths`` (SMEM scalar per batch row), so
+    ragged batches share one compiled kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,  # SMEM [1] i32
+    q_ref,  # [1, G, hd]
+    k_ref,  # [1, block_k, 1, hd]
+    v_ref,  # [1, block_k, 1, hd]
+    o_ref,  # [1, G, hd]
+    m_scr,  # [G, 128] f32
+    l_scr,  # [G, 128] f32
+    acc_scr,  # [G, hd] f32
+    *,
+    sm_scale: float,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    ik = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = ik * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0]  # [G, hd]
+        k = k_ref[0, :, 0, :]  # [block_k, hd]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, block_k]
+        s = s * sm_scale
+        G = s.shape[0]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (G, block_k), 1)
+        mask = k_pos < length
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape
+        )
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ik == num_kv_blocks - 1)
+    def _emit():
+        l = l_scr[:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.where(l > 0.0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_k", "sm_scale", "interpret")
+)
+def decode_attention(
+    q: jnp.ndarray,  # [B, Hq, hd]
+    k: jnp.ndarray,  # [B, S, KVH, hd]
+    v: jnp.ndarray,  # [B, S, KVH, hd]
+    lengths: jnp.ndarray,  # [B] i32 — valid prefix of each cache row
+    *,
+    block_k: int = 512,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, hd = q.shape
+    S, KVH = k.shape[1], k.shape[2]
+    if Hq % KVH != 0:
+        raise ValueError(f"q heads {Hq} not a multiple of kv heads {KVH}")
+    G = Hq // KVH
+    if sm_scale is None:
+        sm_scale = float(1.0 / np.sqrt(hd))
+
+    block_k = min(block_k, S)
+    k_pad = (-S) % block_k
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    nk = (S + k_pad) // block_k
+
+    # q regrouped so each kv head's G query heads are contiguous
+    q3 = q.reshape(B, KVH, G, hd).reshape(B, KVH * G, hd)
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, block_k=block_k, num_kv_blocks=nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KVH, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda b, h, ik: (b, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ik: (b, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, h, ik: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="decode_attention",
+    )(lengths.astype(jnp.int32), q3, k, v)
+    return out.reshape(B, KVH, G, hd).reshape(B, Hq, hd)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, Sq, Hq, hd]
+    k: jnp.ndarray,  # [B, Sk, kv, hd]
+    v: jnp.ndarray,  # [B, Sk, kv, hd]
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    B, Sq, Hq, hd = q.shape
+    kvh = k.shape[2]
+    G = Hq // kvh
+    qg = q.reshape(B, Sq, kvh, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = mask & (q_pos[:, None] >= k_pos[None, :])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, Hq, hd)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, Hq, hd]
+    k: jnp.ndarray,  # [B, S, kv, hd]
+    v: jnp.ndarray,  # [B, S, kv, hd]
+    lengths: jnp.ndarray,  # [B] valid prefix length of each cache row
+) -> jnp.ndarray:
+    B, Hq, hd = q.shape
+    kvh = k.shape[2]
+    G = Hq // kvh
+    qg = q.reshape(B, kvh, G, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]  # [B, S]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v)
+    return out.reshape(B, Hq, hd)
+
+
+def exit_confidence_ref(h: jnp.ndarray, w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """h: [B, d], w: [d, V] -> (top-1 softmax prob [B] f32, argmax [B] i32).
+
+    Matmul accumulates in f32, matching the kernel's MXU accumulation.
+    """
+    logits = jnp.matmul(
+        h, w.astype(h.dtype), preferred_element_type=jnp.float32
+    )
+    m = jnp.max(logits, axis=-1)
+    l = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+    conf = 1.0 / l
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return conf, idx

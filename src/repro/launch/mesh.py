@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any jax init).
+
+Single pod : (16, 16)    axes ("data", "model")   — 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16) axes ("pod", "data", "model") — 512 chips.  The
+"pod" axis is pure data parallelism across the DCN boundary; "data" is
+in-pod DP/FSDP; "model" is tensor parallelism inside an ICI-adjacent slice.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    # REPRO_MESH=32x8 reshapes the single-pod (data, model) factorization
+    # (same 256 chips, different TP degree) — a §Perf iteration knob.
+    override = os.environ.get("REPRO_MESH", "")
+    if override and not multi_pod:
+        d, m = (int(x) for x in override.split("x"))
+        shape, axes = (d, m), ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """A 1x1 mesh on whatever single device is present (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,5 @@
+"""Pure-JAX model zoo: staged decoders with early-exit heads.
+
+Layers are written as *global math* — sharding is applied through logical-axis
+annotations (see repro.sharding) and GSPMD propagation, never per-shard code.
+"""

@@ -1,0 +1,414 @@
+"""Attention variants: GQA (optional bias / sliding window) and MLA
+(DeepSeek-style multi-head latent attention), plus their KV caches.
+
+Prefill/train attention is *q-chunked*: scores are materialized only for a
+block of queries at a time (lax.map over chunks), so a 32k-token prefill
+never builds an S x S score tensor.  The Pallas flash kernel
+(repro.kernels.flash_attention) is the TPU-optimized drop-in for the same
+math; this module is the XLA path the dry-run lowers.
+
+Caches are plain dicts (pytrees):
+  full   : {"k": [B,S,kv,hd], "v": [B,S,kv,hd], "pos": int32[]}
+  window : same shapes with S == window; ring-buffer indexed by pos % window,
+           plus "slot_pos": int32[window] holding each slot's global position
+           (-1 == empty).
+  mla    : {"c_kv": [B,S,lora], "k_pe": [B,S,rope_dim], "pos": int32[]}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.layers import Params, apply_rope, dense_init, matmul
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int | None = None
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def groups(self) -> int:
+        assert self.num_heads % self.num_kv_heads == 0
+        return self.num_heads // self.num_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, dims: AttnDims) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p: Params = {
+        "w_q": dense_init(kq, dims.d_model, dims.q_dim),
+        "w_k": dense_init(kk, dims.d_model, dims.kv_dim),
+        "w_v": dense_init(kv, dims.d_model, dims.kv_dim),
+        "w_o": dense_init(ko, dims.q_dim, dims.d_model),
+    }
+    if dims.qkv_bias:
+        p["b_q"] = jnp.zeros((dims.q_dim,), jnp.float32)
+        p["b_k"] = jnp.zeros((dims.kv_dim,), jnp.float32)
+        p["b_v"] = jnp.zeros((dims.kv_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(params: Params, x: jnp.ndarray, dims: AttnDims):
+    B, S, _ = x.shape
+    q = matmul(x, params["w_q"])
+    k = matmul(x, params["w_k"])
+    v = matmul(x, params["w_v"])
+    if "b_q" in params:
+        q = q + params["b_q"].astype(q.dtype)
+        k = k + params["b_k"].astype(k.dtype)
+        v = v + params["b_v"].astype(v.dtype)
+    q = q.reshape(B, S, dims.num_heads, dims.head_dim)
+    k = k.reshape(B, S, dims.num_kv_heads, dims.head_dim)
+    v = v.reshape(B, S, dims.num_kv_heads, dims.head_dim)
+    return q, k, v
+
+
+def _attend_block(
+    q: jnp.ndarray,  # [B, Cq, Hq, hd]
+    k: jnp.ndarray,  # [B, Sk, kv, hd]
+    v: jnp.ndarray,  # [B, Sk, kv, hd]
+    q_pos: jnp.ndarray,  # [Cq] global positions of the queries
+    k_pos: jnp.ndarray,  # [Sk] global positions of the keys (-1 == invalid)
+    groups: int,
+    window: int | None,
+) -> jnp.ndarray:
+    """Masked softmax attention for one q-chunk (grouped heads)."""
+    B, Cq, Hq, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(B, Cq, kvh, groups, hd)
+    scale = 1.0 / np.sqrt(hd)
+    # [B, kv, g, Cq, Sk]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    causal = q_pos[:, None] >= k_pos[None, :]
+    valid = k_pos[None, :] >= 0
+    mask = causal & valid
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Cq, Hq, v.shape[-1])  # v head dim may differ (MLA)
+
+
+def chunked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,  # [Sq]
+    k_positions: jnp.ndarray,  # [Sk]
+    groups: int,
+    window: int | None = None,
+    q_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Causal attention, q chunked so scores stay [B, kv, g, Cq, Sk]."""
+    B, Sq, Hq, hd = q.shape
+    q_chunk = min(q_chunk, Sq)
+    if Sq % q_chunk != 0:  # fall back to one block for ragged tiny shapes
+        q_chunk = Sq
+    n_chunks = Sq // q_chunk
+    qc = q.reshape(B, n_chunks, q_chunk, Hq, hd).swapaxes(0, 1)
+    pc = q_positions.reshape(n_chunks, q_chunk)
+
+    def one(args):
+        qb, pb = args
+        return _attend_block(qb, k, v, pb, k_positions, groups, window)
+
+    out = layers.loop_map(one, (qc, pc))  # [n_chunks, B, q_chunk, Hq, v_hd]
+    return out.swapaxes(0, 1).reshape(B, Sq, Hq, v.shape[-1])
+
+
+def gqa_forward(
+    params: Params,
+    x: jnp.ndarray,  # [B, S, d]
+    dims: AttnDims,
+    positions: jnp.ndarray | None = None,  # [S]
+    q_chunk: int = 1024,
+    return_kv: bool = False,
+):
+    """Full-sequence causal attention (train / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(params, x, dims)
+    q = apply_rope(q, positions[None, :], dims.rope_theta)
+    k = apply_rope(k, positions[None, :], dims.rope_theta)
+    out = chunked_attention(
+        q, k, v, positions, positions, dims.groups, dims.sliding_window, q_chunk
+    )
+    out = matmul(out.reshape(B, S, dims.q_dim), params["w_o"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV caches (full + ring-buffer window)
+# ---------------------------------------------------------------------------
+
+
+def make_kv_cache(batch: int, max_len: int, dims: AttnDims, dtype=jnp.bfloat16) -> Params:
+    return {
+        "k": jnp.zeros((batch, max_len, dims.num_kv_heads, dims.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, dims.num_kv_heads, dims.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_window_cache(batch: int, dims: AttnDims, dtype=jnp.bfloat16) -> Params:
+    w = dims.sliding_window
+    assert w is not None
+    cache = make_kv_cache(batch, w, dims, dtype)
+    cache["slot_pos"] = jnp.full((w,), -1, jnp.int32)
+    return cache
+
+
+def prefill_into_cache(cache: Params, k: jnp.ndarray, v: jnp.ndarray) -> Params:
+    """Write a prefilled (k, v) prefix into a *full* cache starting at 0."""
+    S = k.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return cache
+
+
+def _cache_write(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Write one token into the cache at ``slot`` (traced).
+
+    Two lowerings, selected by REPRO_DECODE_WRITE:
+      * "where" (default): masked elementwise select over the seq dim —
+        purely LOCAL under any sharding of that dim (the write fuses into
+        the donated output buffer on TPU).  A dynamic-update-slice at a
+        traced index into a sharded dim instead lowers as
+        all-gather + update + reslice: the whole cache crosses the wire
+        every step (measured: 2 TB/step for qwen2.5-32b decode_32k).
+      * "dus": the naive dynamic_update_slice (kept for §Perf baselines).
+    """
+    import os as _os
+
+    new = new.astype(buf.dtype)
+    if _os.environ.get("REPRO_DECODE_WRITE", "where") == "dus":
+        start = (0,) * buf.ndim
+        start = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new, start)
+    S = buf.shape[1]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (1, S) + (1,) * (buf.ndim - 2), 1) == slot
+    return jnp.where(mask, jnp.broadcast_to(new, buf.shape), buf)
+
+
+def gqa_decode(
+    params: Params,
+    x: jnp.ndarray,  # [B, 1, d]
+    cache: Params,
+    dims: AttnDims,
+):
+    """One decode step against a full or windowed cache."""
+    B = x.shape[0]
+    pos = cache["pos"]
+    q, k_new, v_new = _project_qkv(params, x, dims)
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, pos_b, dims.rope_theta)
+    k_new = apply_rope(k_new, pos_b, dims.rope_theta)
+
+    windowed = "slot_pos" in cache
+    S_cache = cache["k"].shape[1]
+    slot = jnp.where(windowed, pos % S_cache, jnp.minimum(pos, S_cache - 1))
+
+    new_cache = dict(cache)
+    new_cache["k"] = _cache_write(cache["k"], k_new, slot)
+    new_cache["v"] = _cache_write(cache["v"], v_new, slot)
+    new_cache["pos"] = pos + 1
+
+    if windowed:
+        slot_pos = cache["slot_pos"].at[slot].set(pos)
+        new_cache["slot_pos"] = slot_pos
+        k_positions = slot_pos
+        window = None  # ring buffer already bounds the window
+    else:
+        k_positions = jnp.where(
+            jnp.arange(S_cache) <= pos, jnp.arange(S_cache), -1
+        ).astype(jnp.int32)
+        window = dims.sliding_window
+
+    out = _attend_block(
+        q,
+        new_cache["k"],
+        new_cache["v"],
+        jnp.full((1,), pos, jnp.int32),
+        k_positions,
+        dims.groups,
+        window,
+    )
+    out = matmul(out.reshape(B, 1, dims.q_dim), params["w_o"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlaDims:
+    d_model: int
+    num_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+
+    @property
+    def qk_head_dim(self) -> int:
+        return self.qk_nope_head_dim + self.qk_rope_head_dim
+
+
+def mla_init(key, dims: MlaDims) -> Params:
+    ks = jax.random.split(key, 6)
+    H = dims.num_heads
+    return {
+        # queries: full-rank projection to per-head (nope + rope) dims
+        "w_q": dense_init(ks[0], dims.d_model, H * dims.qk_head_dim),
+        # joint KV low-rank compression
+        "w_dkv": dense_init(ks[1], dims.d_model, dims.kv_lora_rank),
+        "w_kpe": dense_init(ks[2], dims.d_model, dims.qk_rope_head_dim),
+        # up-projections out of the latent
+        "w_uk": dense_init(ks[3], dims.kv_lora_rank, H * dims.qk_nope_head_dim),
+        "w_uv": dense_init(ks[4], dims.kv_lora_rank, H * dims.v_head_dim),
+        "w_o": dense_init(ks[5], H * dims.v_head_dim, dims.d_model),
+        "norm_ckv": layers.rmsnorm_init(dims.kv_lora_rank),
+    }
+
+
+def _mla_q(params: Params, x: jnp.ndarray, dims: MlaDims, positions: jnp.ndarray):
+    B, S, _ = x.shape
+    H = dims.num_heads
+    q = matmul(x, params["w_q"]).reshape(B, S, H, dims.qk_head_dim)
+    q_nope = q[..., : dims.qk_nope_head_dim]
+    q_pe = apply_rope(q[..., dims.qk_nope_head_dim :], positions, dims.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_latent(params: Params, x: jnp.ndarray, dims: MlaDims, positions: jnp.ndarray):
+    c_kv = layers.rmsnorm(params["norm_ckv"], matmul(x, params["w_dkv"]))
+    k_pe = matmul(x, params["w_kpe"])[:, :, None, :]  # single shared rope head
+    k_pe = apply_rope(k_pe, positions, dims.rope_theta)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def mla_forward(
+    params: Params,
+    x: jnp.ndarray,
+    dims: MlaDims,
+    positions: jnp.ndarray | None = None,
+    q_chunk: int = 1024,
+    return_latent: bool = False,
+):
+    """Train/prefill MLA: expand k/v out of the latent, attend causally."""
+    B, S, _ = x.shape
+    H = dims.num_heads
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    pos2 = positions[None, :]
+    q_nope, q_pe = _mla_q(params, x, dims, pos2)
+    c_kv, k_pe = _mla_latent(params, x, dims, pos2)
+
+    k_nope = matmul(c_kv, params["w_uk"]).reshape(B, S, H, dims.qk_nope_head_dim)
+    v = matmul(c_kv, params["w_uv"]).reshape(B, S, H, dims.v_head_dim)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dims.qk_rope_head_dim))],
+        axis=-1,
+    )
+    out = chunked_attention(q, k, v, positions, positions, groups=1, q_chunk=q_chunk)
+    out = matmul(out.reshape(B, S, H * dims.v_head_dim), params["w_o"])
+    if return_latent:
+        return out, (c_kv, k_pe)
+    return out
+
+
+def make_mla_cache(batch: int, max_len: int, dims: MlaDims, dtype=jnp.bfloat16) -> Params:
+    return {
+        "c_kv": jnp.zeros((batch, max_len, dims.kv_lora_rank), dtype),
+        "k_pe": jnp.zeros((batch, max_len, dims.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_prefill_into_cache(cache: Params, c_kv: jnp.ndarray, k_pe: jnp.ndarray) -> Params:
+    S = c_kv.shape[1]
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0)
+    )
+    cache["k_pe"] = jax.lax.dynamic_update_slice(
+        cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, 0, 0)
+    )
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return cache
+
+
+def mla_decode(params: Params, x: jnp.ndarray, cache: Params, dims: MlaDims):
+    """Absorbed MLA decode: score and mix *in latent space* — the per-step
+    cost is O(S * (lora + rope_dim)) per head instead of O(S * head_dim * 2)
+    with re-expanded keys/values.  This is the inference win MLA exists for.
+    """
+    B = x.shape[0]
+    H = dims.num_heads
+    pos = cache["pos"]
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+
+    q_nope, q_pe = _mla_q(params, x, dims, pos_b)  # [B,1,H,*]
+    c_new, kpe_new = _mla_latent(params, x, dims, pos_b)
+
+    S_cache = cache["c_kv"].shape[1]
+    new_cache = dict(cache)
+    new_cache["c_kv"] = _cache_write(cache["c_kv"], c_new, pos)
+    new_cache["k_pe"] = _cache_write(cache["k_pe"], kpe_new, pos)
+    new_cache["pos"] = pos + 1
+
+    # absorb W_uk into the query:  q_lat[b,h,r] = sum_d q_nope[b,h,d] W_uk[r,(h,d)]
+    w_uk = params["w_uk"].reshape(dims.kv_lora_rank, H, dims.qk_nope_head_dim)
+    q_lat = jnp.einsum(
+        "bhd,rhd->bhr", q_nope[:, 0].astype(jnp.bfloat16), w_uk.astype(jnp.bfloat16)
+    )
+    c_kv = new_cache["c_kv"]  # [B,S,lora]
+    k_pe = new_cache["k_pe"]  # [B,S,rope]
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv).astype(jnp.float32)
+    scores = scores + jnp.einsum(
+        "bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32), k_pe.astype(jnp.float32)
+    )
+    scores = scores / np.sqrt(dims.qk_head_dim)
+    valid = jnp.arange(S_cache) <= pos
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    out_lat = jnp.einsum("bhs,bsr->bhr", probs, c_kv)  # [B,H,lora]
+    w_uv = params["w_uv"].reshape(dims.kv_lora_rank, H, dims.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, w_uv.astype(out_lat.dtype))
+    out = matmul(out.reshape(B, 1, H * dims.v_head_dim), params["w_o"])
+    return out, new_cache

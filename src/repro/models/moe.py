@@ -1,0 +1,154 @@
+"""Mixture-of-Experts with capacity-based scatter dispatch (GShard-style).
+
+Why scatter dispatch: computing every expert densely for every token costs
+FLOPs proportional to E (4x waste for Mixtral top-2-of-8, ~10x for
+DeepSeek's 64-expert router).  Dispatching tokens into per-expert capacity
+buffers keeps the FLOP count proportional to top_k * capacity_factor —
+which is what the 6*N_active*D roofline number assumes.
+
+Dispatch uses scatter-add with within-expert ranks from a cumsum; tokens
+whose rank exceeds the capacity are dropped (standard GShard semantics) by
+routing them to a sacrificial extra slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.layers import Params, matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeDims:
+    d_model: int
+    d_ff_expert: int
+    num_experts: int
+    top_k: int
+    num_shared: int = 0
+    d_ff_shared: int = 0  # total shared-expert hidden dim (0 => num_shared * d_ff_expert)
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    # "softmax_topk": softmax over all experts then take top-k (DeepSeek)
+    # "topk_softmax": take top-k logits then softmax over them (Mixtral)
+    router_norm: str = "topk_softmax"
+
+    @property
+    def shared_ff(self) -> int:
+        if self.num_shared == 0:
+            return 0
+        return self.d_ff_shared or self.num_shared * self.d_ff_expert
+
+
+def moe_init(key, dims: MoeDims) -> Params:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, d, f = dims.num_experts, dims.d_model, dims.d_ff_expert
+    p: Params = {
+        "router": layers.dense_init(kr, d, E),
+        "experts": {
+            "w_gate": layers.truncated_normal_init(kg, (E, d, f), 1.0),
+            "w_up": layers.truncated_normal_init(ku, (E, d, f), 1.0),
+            "w_down": layers.truncated_normal_init(kd, (E, f, d), 1.0),
+        },
+    }
+    if dims.num_shared > 0:
+        p["shared"] = layers.glu_ffn_init(ks, d, dims.shared_ff)
+    return p
+
+
+def router_probs(logits: jnp.ndarray, dims: MoeDims):
+    """Return (gates [T,k], expert_idx [T,k], probs_full [T,E])."""
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    if dims.router_norm == "softmax_topk":
+        gates, idx = jax.lax.top_k(probs_full, dims.top_k)
+        gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    else:
+        top_logits, idx = jax.lax.top_k(logits, dims.top_k)
+        gates = jax.nn.softmax(top_logits, axis=-1)
+    return gates, idx, probs_full
+
+
+def capacity(num_tokens: int, dims: MoeDims) -> int:
+    c = int(np.ceil(num_tokens * dims.top_k * dims.capacity_factor / dims.num_experts))
+    return max(c, dims.top_k)
+
+
+def moe_forward(params: Params, x: jnp.ndarray, dims: MoeDims):
+    """x: [B, S, d]  ->  (out [B, S, d], aux_loss scalar).
+
+    aux_loss is the switch-style load-balance loss E * sum_e f_e * P_e.
+    """
+    B, S, d = x.shape
+    T = B * S
+    E, k = dims.num_experts, dims.top_k
+    C = capacity(T, dims)
+    xf = x.reshape(T, d)
+
+    logits = matmul(xf, params["router"]).astype(jnp.float32)  # [T, E]
+    gates, idx, probs_full = router_probs(logits, dims)
+
+    # ---- aux load-balance loss -------------------------------------------
+    ones = jnp.zeros((T, E), jnp.float32).at[jnp.arange(T)[:, None], idx].add(1.0)
+    f_e = ones.mean(axis=0) / k  # fraction routed to e
+    p_e = probs_full.mean(axis=0)
+    aux = E * jnp.sum(f_e * p_e)
+
+    # ---- within-expert ranks via prefix sum over (token, k) choices ------
+    # associative_scan = log-depth prefix sum: O(n log n) work on TPU (a
+    # naive cumsum lowers via reduce-window, quadratic in XLA's cost model
+    # and slow for the million-token dispatch tables MoE training builds)
+    flat_e = idx.reshape(T * k)  # expert of each choice
+    choice_onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*k, E]
+    scan_incl = jax.lax.associative_scan(jnp.add, choice_onehot, axis=0)
+    ranks_all = scan_incl - choice_onehot
+    rank = jnp.take_along_axis(ranks_all, flat_e[:, None], axis=1)[:, 0]  # [T*k]
+
+    dropped = rank >= C
+    slot = jnp.where(dropped, C, rank)  # C == sacrificial overflow slot
+
+    flat_gate = gates.reshape(T * k)
+    token_of_choice = jnp.repeat(jnp.arange(T), k)
+
+    # ---- dispatch: scatter tokens into per-expert buffers ----------------
+    buf = jnp.zeros((E, C + 1, d), xf.dtype)
+    buf = buf.at[flat_e, slot].add(xf[token_of_choice])
+    expert_in = buf[:, :C]  # [E, C, d]
+
+    # ---- expert FFN (batched over experts) --------------------------------
+    we = params["experts"]
+    act = layers.activation(dims.act)
+    g = act(jnp.einsum("ecd,edf->ecf", expert_in, we["w_gate"].astype(expert_in.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", expert_in, we["w_up"].astype(expert_in.dtype))
+    expert_out = jnp.einsum("ecf,efd->ecd", g * u, we["w_down"].astype(expert_in.dtype))
+
+    # ---- combine: gather back and weight by gates --------------------------
+    padded = jnp.concatenate(
+        [expert_out, jnp.zeros((E, 1, d), expert_out.dtype)], axis=1
+    )  # overflow slot reads zeros
+    picked = padded[flat_e, slot]  # [T*k, d]
+    weighted = picked * flat_gate[:, None].astype(picked.dtype)
+    out = jnp.sum(weighted.reshape(T, k, d), axis=1)
+
+    if "shared" in params:
+        out = out + layers.glu_ffn(params["shared"], xf, dims.act)
+
+    return out.reshape(B, S, d), aux
+
+
+def moe_active_params(dims: MoeDims) -> int:
+    """Parameters touched per token (for 6*N_active*D roofline accounting)."""
+    per_expert = 3 * dims.d_model * dims.d_ff_expert
+    routed = dims.top_k * per_expert
+    shared = 3 * dims.d_model * dims.shared_ff
+    router = dims.d_model * dims.num_experts
+    return routed + shared + router
+
+
+def moe_total_params(dims: MoeDims) -> int:
+    per_expert = 3 * dims.d_model * dims.d_ff_expert
+    shared = 3 * dims.d_model * dims.shared_ff
+    router = dims.d_model * dims.num_experts
+    return dims.num_experts * per_expert + shared + router

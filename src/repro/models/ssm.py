@@ -1,0 +1,586 @@
+"""State-space & recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM / sLSTM).
+
+TPU adaptation notes (DESIGN.md §2):
+  * Mamba2 runs the **chunked SSD algorithm** — quadratic *within* a chunk
+    (pure matmuls on the MXU), linear scan *across* chunk states.  The
+    sequential token-by-token recurrence exists only for decode.
+  * mLSTM uses the same chunkwise decomposition with log-space
+    stabilization (exponential gates), so training never materializes a
+    per-timestep matrix memory; only S/Q chunk states are kept.
+  * sLSTM is inherently sequential (h_{t-1} feeds the gates) — lax.scan
+    over time; its state is O(B*H*P), small enough to checkpoint densely.
+
+All cores are validated against sequential references in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+from repro.models.layers import Params, matmul
+
+
+def _pick_chunk(seq_len: int, chunk: int) -> int:
+    if seq_len % chunk == 0:
+        return chunk
+    # largest divisor of seq_len not exceeding requested chunk
+    for c in range(min(chunk, seq_len), 0, -1):
+        if seq_len % c == 0:
+            return c
+    return seq_len
+
+
+def segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise cumulative sums: out[..., t, s] = sum_{u=s+1..t} a[..., u].
+
+    Entries with s > t are -inf (used as log-decays).
+    """
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{u=s+1..t}
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d (+ decode cache)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: [B,S,C], w: [K,C] depthwise, left-padded causal."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is 4 — unrolled adds beat a conv op on TPU here
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def conv_step(x_t: jnp.ndarray, conv_cache: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """One decode step: x_t [B,C]; conv_cache [B,K-1,C] holds prior inputs."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_cache, x_t[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,kc->bc", window, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return out, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_dim(self) -> int:
+        # [z, x, B, C, dt]
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.num_heads
+
+
+def mamba_init(key, dims: MambaDims) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    H = dims.num_heads
+    return {
+        "in_proj": layers.dense_init(k1, dims.d_model, dims.in_proj_dim),
+        "conv_w": layers.truncated_normal_init(k2, (dims.conv_kernel, dims.conv_dim), 1.0),
+        "conv_b": jnp.zeros((dims.conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)),  # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))),  # softplus^-1(0.01)
+        "norm": layers.rmsnorm_init(dims.d_inner),
+        "out_proj": layers.dense_init(k3, dims.d_inner, dims.d_model),
+    }
+
+
+def _mamba_split(params: Params, x: jnp.ndarray, dims: MambaDims):
+    proj = matmul(x, params["in_proj"])
+    di, gn = dims.d_inner, dims.n_groups * dims.d_state
+    z = proj[..., :di]
+    xbc = proj[..., di : di + dims.conv_dim]
+    dt = proj[..., di + dims.conv_dim :]
+    return z, xbc, dt
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # [B,S,H,P]
+    a: jnp.ndarray,  # [B,S,H]  log-decay per step (= dt * A, negative)
+    b: jnp.ndarray,  # [B,S,G,N]
+    c: jnp.ndarray,  # [B,S,G,N]
+    chunk: int,
+    initial_state: jnp.ndarray | None = None,  # [B,H,P,N]
+):
+    """Chunked SSD scan (Mamba2).  Returns (y [B,S,H,P], final_state)."""
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    Q = _pick_chunk(S, chunk)
+    nC = S // Q
+    hpg = H // G  # heads per group
+
+    xr = x.reshape(B, nC, Q, H, P)
+    ar = a.reshape(B, nC, Q, H).astype(jnp.float32)
+    br = b.reshape(B, nC, Q, G, N)
+    cr = c.reshape(B, nC, Q, G, N)
+
+    a_cum = jnp.cumsum(ar, axis=2)  # [B,nC,Q,H]
+
+    # ---- intra-chunk (quadratic, matmul-heavy) ---------------------------
+    L = jnp.exp(segsum(ar.transpose(0, 1, 3, 2)))  # [B,nC,H,Q,Q]
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", cr.astype(jnp.float32), br.astype(jnp.float32))
+    cb = jnp.repeat(cb, hpg, axis=2)  # [B,nC,H,Q,S] group -> heads
+    scores = (cb * L).astype(x.dtype)
+    y_diag = jnp.einsum("bchqs,bcshp->bcqhp", scores, xr)
+
+    # ---- chunk boundary states -------------------------------------------
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # [B,nC,Q,H]
+    bx = jnp.einsum(
+        "bcqgn,bcqh,bcqhp->bchpn",
+        br.astype(jnp.float32),
+        decay_to_end,
+        xr.astype(jnp.float32),
+    )  # per-chunk state contribution
+
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # [B,nC,H] total decay of chunk
+
+    def scan_fn(h_prev, inputs):
+        bx_c, dec_c = inputs  # [B,H,P,N], [B,H]
+        h_new = h_prev * dec_c[..., None, None] + bx_c
+        return h_new, h_prev
+
+    h0 = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+    h_final, h_prevs = layers.loop_scan(
+        scan_fn,
+        h0,
+        (bx.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # [B,nC,H,P,N] state entering chunk
+
+    # ---- inter-chunk output ----------------------------------------------
+    state_decay = jnp.exp(a_cum)  # decay from chunk start to step q
+    c_heads = jnp.repeat(cr, hpg, axis=3 - 1) if G != H else cr
+    c_full = jnp.repeat(cr.astype(jnp.float32), hpg, axis=3)  # [B,nC,Q,H,N]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", c_full, h_prevs, state_decay)
+
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(
+    x_t: jnp.ndarray,  # [B,H,P]
+    a_t: jnp.ndarray,  # [B,H]
+    b_t: jnp.ndarray,  # [B,G,N]
+    c_t: jnp.ndarray,  # [B,G,N]
+    state: jnp.ndarray,  # [B,H,P,N] f32
+):
+    """Single-token SSD recurrence (decode)."""
+    H = x_t.shape[1]
+    G = b_t.shape[1]
+    hpg = H // G
+    b_full = jnp.repeat(b_t, hpg, axis=1).astype(jnp.float32)  # [B,H,N]
+    c_full = jnp.repeat(c_t, hpg, axis=1).astype(jnp.float32)
+    decay = jnp.exp(a_t.astype(jnp.float32))[..., None, None]
+    new_state = state * decay + jnp.einsum(
+        "bhp,bhn->bhpn", x_t.astype(jnp.float32), b_full
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, c_full)
+    return y.astype(x_t.dtype), new_state
+
+
+def mamba_forward(
+    params: Params,
+    x: jnp.ndarray,  # [B,S,d]
+    dims: MambaDims,
+    initial_state: jnp.ndarray | None = None,
+    return_state: bool = False,
+):
+    B, S, _ = x.shape
+    H, P, N, G = dims.num_heads, dims.head_dim, dims.d_state, dims.n_groups
+    z, xbc, dt_raw = _mamba_split(params, x, dims)
+    xbc = jax.nn.silu(causal_conv1d(xbc, params["conv_w"], params["conv_b"]))
+    xs = xbc[..., : dims.d_inner].reshape(B, S, H, P)
+    b = xbc[..., dims.d_inner : dims.d_inner + G * N].reshape(B, S, G, N)
+    c = xbc[..., dims.d_inner + G * N :].reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])[None, None, :] * dt  # log decay, negative
+
+    y, state = ssd_chunked(xs * dt[..., None].astype(xs.dtype), a, b, c, dims.chunk, initial_state)
+    y = y + xs * params["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, dims.d_inner)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = matmul(y, params["out_proj"])
+    if return_state:
+        return out, state
+    return out
+
+
+def make_mamba_cache(batch: int, dims: MambaDims, dtype=jnp.bfloat16) -> Params:
+    return {
+        "conv": jnp.zeros((batch, dims.conv_kernel - 1, dims.conv_dim), dtype),
+        "ssd": jnp.zeros((batch, dims.num_heads, dims.head_dim, dims.d_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_decode(params: Params, x: jnp.ndarray, cache: Params, dims: MambaDims):
+    """x: [B,1,d] -> (out [B,1,d], cache')."""
+    B = x.shape[0]
+    H, P, N, G = dims.num_heads, dims.head_dim, dims.d_state, dims.n_groups
+    z, xbc, dt_raw = _mamba_split(params, x[:, 0], dims)
+    xbc, conv_new = conv_step(xbc, cache["conv"], params["conv_w"], params["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., : dims.d_inner].reshape(B, H, P)
+    b = xbc[..., dims.d_inner : dims.d_inner + G * N].reshape(B, G, N)
+    c = xbc[..., dims.d_inner + G * N :].reshape(B, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = -jnp.exp(params["a_log"])[None, :] * dt
+    y, ssd_new = ssd_step(xs * dt[..., None].astype(xs.dtype), a, b, c, cache["ssd"])
+    y = y + xs * params["d_skip"][None, :, None].astype(y.dtype)
+    y = layers.rmsnorm(params["norm"], y.reshape(B, dims.d_inner) * jax.nn.silu(z))
+    out = matmul(y, params["out_proj"])[:, None, :]
+    return out, {"conv": conv_new, "ssd": ssd_new, "pos": cache["pos"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell), chunkwise-parallel
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class XlstmDims:
+    d_model: int
+    num_heads: int
+    expand: int = 2  # mLSTM inner expansion
+    conv_kernel: int = 4
+    chunk: int = 256
+    slstm_proj_factor: float = 4.0 / 3.0
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def m_head_dim(self) -> int:
+        assert self.d_inner % self.num_heads == 0
+        return self.d_inner // self.num_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        assert self.d_model % self.num_heads == 0
+        return self.d_model // self.num_heads
+
+    @property
+    def slstm_ff(self) -> int:
+        f = int(self.d_model * self.slstm_proj_factor)
+        return ((f + 63) // 64) * 64  # 64-align for the MXU
+
+
+def mlstm_init(key, dims: XlstmDims) -> Params:
+    ks = jax.random.split(key, 7)
+    di = dims.d_inner
+    H = dims.num_heads
+    return {
+        "up_proj": layers.dense_init(ks[0], dims.d_model, 2 * di),  # [x | z-gate]
+        "conv_w": layers.truncated_normal_init(ks[1], (dims.conv_kernel, di), 1.0),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "w_q": layers.dense_init(ks[2], di, di),
+        "w_k": layers.dense_init(ks[3], di, di),
+        "w_v": layers.dense_init(ks[4], di, di),
+        "w_if": layers.dense_init(ks[5], di, 2 * H),  # input & forget gate logits
+        "if_bias": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "norm_h": layers.rmsnorm_init(di),
+        "down_proj": layers.dense_init(ks[6], di, dims.d_model),
+    }
+
+
+def mlstm_chunked(
+    q: jnp.ndarray,  # [B,S,H,P] (already scaled by 1/sqrt(P))
+    k: jnp.ndarray,  # [B,S,H,P]
+    v: jnp.ndarray,  # [B,S,H,P]
+    i_gate: jnp.ndarray,  # [B,S,H]  raw input-gate logits (exp gate)
+    f_gate: jnp.ndarray,  # [B,S,H]  raw forget-gate logits (sigmoid in log space)
+    chunk: int,
+    initial: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray] | None = None,
+):
+    """Stabilized chunkwise mLSTM.  Returns (h [B,S,H,P], (C, n, m) final).
+
+    State convention: stored (C_hat, n_hat) are the true values scaled by
+    exp(-m); m is the running log-stabilizer per (B, H).
+    """
+    B, S, H, P = q.shape
+    Q = _pick_chunk(S, chunk)
+    nC = S // Q
+
+    qr = q.reshape(B, nC, Q, H, P)
+    kr = k.reshape(B, nC, Q, H, P)
+    vr = v.reshape(B, nC, Q, H, P)
+    ir = i_gate.reshape(B, nC, Q, H).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_gate.reshape(B, nC, Q, H).astype(jnp.float32))
+
+    F = jnp.cumsum(lf, axis=2)  # [B,nC,Q,H] inclusive cumsum of log-forgets
+    F_total = F[:, :, -1, :]  # [B,nC,H]
+
+    # log-weights of intra-chunk source s for target t:  F_t - F_s + i_s
+    D = (F[:, :, :, None, :] - F[:, :, None, :, :]) + ir[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    D = jnp.where(tri[None, None, :, :, None], D, -jnp.inf)  # [B,nC,t,s,H]
+    intra_max = jnp.max(D, axis=3)  # [B,nC,Q,H]
+
+    # log-weight of state contribution at step t: F_t (+ m_prev, added in scan)
+    # per-chunk scan carries (C_hat, n_hat, m) and emits per-chunk h.
+    def scan_fn(carry, inp):
+        C_hat, n_hat, m = carry  # [B,H,P,P], [B,H,P], [B,H]
+        qc, kc, vc, Dc, imaxc, Fc, Ftotc, irc = inp
+        # new stabilizer per step: max(intra max, F_t + m_prev)
+        m_t = jnp.maximum(imaxc, Fc + m[:, None, :])  # [B,Q,H]
+        w_intra = jnp.exp(Dc - m_t[:, :, None, :])  # [B,t,s,H]
+        scores = jnp.einsum("bthp,bshp->btsh", qc.astype(jnp.float32), kc.astype(jnp.float32))
+        sw = scores * w_intra
+        num_intra = jnp.einsum("btsh,bshp->bthp", sw, vc.astype(jnp.float32))
+        den_intra = jnp.sum(sw, axis=2)  # [B,t,H]
+
+        w_state = jnp.exp(Fc + m[:, None, :] - m_t)  # [B,Q,H]
+        num_state = jnp.einsum("bthp,bhpn->bthn", qc.astype(jnp.float32), C_hat)
+        num_state = num_state * w_state[..., None]
+        den_state = jnp.einsum("bthp,bhp->bth", qc.astype(jnp.float32), n_hat) * w_state
+
+        num = num_intra + num_state
+        den = den_intra + den_state
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # ---- end-of-chunk state update ------------------------------------
+        lw_src = Ftotc[:, None, :] - Fc + irc  # [B,Q,H] log-weight of source s
+        m_new = jnp.maximum(Ftotc + m, jnp.max(lw_src, axis=1))  # [B,H]
+        w_src = jnp.exp(lw_src - m_new[:, None, :])  # [B,Q,H]
+        C_new = C_hat * jnp.exp(Ftotc + m - m_new)[..., None, None] + jnp.einsum(
+            "bshp,bsh,bshn->bhpn", vc.astype(jnp.float32), w_src, kc.astype(jnp.float32)
+        )
+        n_new = n_hat * jnp.exp(Ftotc + m - m_new)[..., None] + jnp.einsum(
+            "bsh,bshp->bhp", w_src, kc.astype(jnp.float32)
+        )
+        return (C_new, n_new, m_new), h
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, P, P), jnp.float32)
+        n0 = jnp.zeros((B, H, P), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)  # empty state has weight 0
+    else:
+        C0, n0, m0 = initial
+
+    xs = (
+        qr.transpose(1, 0, 2, 3, 4),
+        kr.transpose(1, 0, 2, 3, 4),
+        vr.transpose(1, 0, 2, 3, 4),
+        D.transpose(1, 0, 2, 3, 4),
+        intra_max.transpose(1, 0, 2, 3),
+        F.transpose(1, 0, 2, 3),
+        F_total.transpose(1, 0, 2),
+        ir.transpose(1, 0, 2, 3),
+    )
+    (Cf, nf, mf), hs = layers.loop_scan(scan_fn, (C0, n0, m0), xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_step(
+    q: jnp.ndarray,  # [B,H,P] scaled
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    i_gate: jnp.ndarray,  # [B,H]
+    f_gate: jnp.ndarray,  # [B,H]
+    state: tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray],
+):
+    C_hat, n_hat, m = state
+    lf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))
+    i = i_gate.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, i)
+    f_w = jnp.exp(lf + m - m_new)
+    i_w = jnp.exp(i - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = C_hat * f_w[..., None, None] + i_w[..., None, None] * jnp.einsum(
+        "bhp,bhn->bhpn", vf, kf
+    )
+    n_new = n_hat * f_w[..., None] + i_w[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhp,bhpn->bhn", qf, C_new)
+    den = jnp.einsum("bhp,bhp->bh", qf, n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+def mlstm_forward(
+    params: Params,
+    x: jnp.ndarray,
+    dims: XlstmDims,
+    initial: tuple | None = None,
+    return_state: bool = False,
+):
+    B, S, _ = x.shape
+    H, P = dims.num_heads, dims.m_head_dim
+    up = matmul(x, params["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    conv_out = jax.nn.silu(causal_conv1d(xi, params["conv_w"], params["conv_b"]))
+    q = matmul(conv_out, params["w_q"]).reshape(B, S, H, P) / np.sqrt(P)
+    k = matmul(conv_out, params["w_k"]).reshape(B, S, H, P)
+    v = matmul(xi, params["w_v"]).reshape(B, S, H, P)
+    gates = matmul(xi, params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)
+    h, state = mlstm_chunked(q, k, v, i_gate, f_gate, dims.chunk, initial)
+    h = h.reshape(B, S, dims.d_inner)
+    h = layers.rmsnorm(params["norm_h"], h) * jax.nn.silu(z)
+    out = matmul(h, params["down_proj"])
+    if return_state:
+        return out, state
+    return out
+
+
+def make_mlstm_cache(batch: int, dims: XlstmDims) -> Params:
+    H, P = dims.num_heads, dims.m_head_dim
+    return {
+        "conv": jnp.zeros((batch, dims.conv_kernel - 1, dims.d_inner), jnp.bfloat16),
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mlstm_decode(params: Params, x: jnp.ndarray, cache: Params, dims: XlstmDims):
+    B = x.shape[0]
+    H, P = dims.num_heads, dims.m_head_dim
+    up = matmul(x[:, 0], params["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    conv_out, conv_new = conv_step(xi, cache["conv"], params["conv_w"], params["conv_b"])
+    conv_out = jax.nn.silu(conv_out)
+    q = matmul(conv_out, params["w_q"]).reshape(B, H, P) / np.sqrt(P)
+    k = matmul(conv_out, params["w_k"]).reshape(B, H, P)
+    v = matmul(xi, params["w_v"]).reshape(B, H, P)
+    gates = matmul(xi, params["w_if"]).astype(jnp.float32) + params["if_bias"]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)
+    h, (C, n, m) = mlstm_step(q, k, v, i_gate, f_gate, (cache["C"], cache["n"], cache["m"]))
+    h = layers.rmsnorm(params["norm_h"], h.reshape(B, dims.d_inner)) * jax.nn.silu(z)
+    out = matmul(h, params["down_proj"])[:, None, :]
+    return out, {"conv": conv_new, "C": C, "n": n, "m": m, "pos": cache["pos"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory cell) — sequential by construction
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, dims: XlstmDims) -> Params:
+    ks = jax.random.split(key, 4)
+    d, H, P = dims.d_model, dims.num_heads, dims.s_head_dim
+    return {
+        "w_gates": layers.dense_init(ks[0], d, 4 * d),  # z, i, f, o pre-activations
+        "r_gates": layers.truncated_normal_init(ks[1], (H, P, 4 * P), 1.0),  # block-diag recurrent
+        "gate_bias": jnp.zeros((4 * d,), jnp.float32),
+        "norm_h": layers.rmsnorm_init(d),
+        "ffn": layers.glu_ffn_init(ks[2], d, dims.slstm_ff),
+    }
+
+
+def slstm_cell(
+    w_x: jnp.ndarray,  # [B, 4d] input pre-activations for this step
+    r_gates: jnp.ndarray,  # [H, P, 4P]
+    gate_bias: jnp.ndarray,
+    state: tuple,  # (c, n, h, m) each [B,H,P]
+    H: int,
+    P: int,
+):
+    c, n, h, m = state
+    B = w_x.shape[0]
+    rec = jnp.einsum("bhp,hpq->bhq", h, r_gates.astype(h.dtype))  # [B,H,4P]
+    pre = w_x.reshape(B, H, 4 * P).astype(jnp.float32) + rec.astype(jnp.float32)
+    pre = pre + gate_bias.reshape(H, 4 * P)[None]
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)  # each [B,H,P]
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    lf = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(lf + m, i_p)
+    i_w = jnp.exp(i_p - m_new)
+    f_w = jnp.exp(lf + m - m_new)
+    c_new = f_w * c + i_w * z
+    n_new = f_w * n + i_w
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(
+    params: Params,
+    x: jnp.ndarray,
+    dims: XlstmDims,
+    initial: tuple | None = None,
+    return_state: bool = False,
+):
+    B, S, d = x.shape
+    H, P = dims.num_heads, dims.s_head_dim
+    w_x = matmul(x, params["w_gates"])  # [B,S,4d]
+
+    if initial is None:
+        zeros = jnp.zeros((B, H, P), jnp.float32)
+        initial = (zeros, zeros, zeros, jnp.full((B, H, P), -1e30, jnp.float32))
+
+    def step(state, w_t):
+        return slstm_cell(w_t, params["r_gates"], params["gate_bias"], state, H, P)
+
+    state, hs = jax.lax.scan(step, initial, w_x.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    h = layers.rmsnorm(params["norm_h"], h)
+    out = h + layers.glu_ffn(params["ffn"], h)
+    if return_state:
+        return out, state
+    return out
+
+
+def make_slstm_cache(batch: int, dims: XlstmDims) -> Params:
+    H, P = dims.num_heads, dims.s_head_dim
+    zeros = jnp.zeros((batch, H, P), jnp.float32)
+    return {
+        "c": zeros,
+        "n": zeros,
+        "h": zeros,
+        "m": jnp.full((batch, H, P), -1e30, jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def slstm_decode(params: Params, x: jnp.ndarray, cache: Params, dims: XlstmDims):
+    B = x.shape[0]
+    H, P = dims.num_heads, dims.s_head_dim
+    w_x = matmul(x[:, 0], params["w_gates"])
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, h_s, m), h = slstm_cell(w_x, params["r_gates"], params["gate_bias"], state, H, P)
+    hh = layers.rmsnorm(params["norm_h"], h.reshape(B, -1).astype(x.dtype))
+    out = hh + layers.glu_ffn(params["ffn"], hh)
+    return out[:, None, :], {"c": c, "n": n, "h": h_s, "m": m, "pos": cache["pos"] + 1}

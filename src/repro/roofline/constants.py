@@ -1,0 +1,23 @@
+"""Target-hardware constants (TPU v5e-class chip)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (per-chip effective collective bandwidth)
+
+BYTES = {
+    "f32": 4,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "s8": 1,
+    "u8": 1,
+    "pred": 1,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "s16": 2,
+    "u16": 2,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}

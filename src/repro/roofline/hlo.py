@@ -1,0 +1,111 @@
+"""Parse collective traffic out of compiled/optimized HLO text.
+
+cost_analysis() reports FLOPs and HBM bytes but NOT collective bytes, so we
+regex the SPMD module: every ``all-gather`` / ``all-reduce`` /
+``reduce-scatter`` / ``all-to-all`` / ``collective-permute`` instruction,
+its result shape, and its replica-group size.
+
+Per-device wire-bytes model (ring algorithms):
+    all-gather        : result_bytes * (g-1)/g         (receives all but own shard)
+    reduce-scatter    : result_bytes * (g-1)           (input = g * result)
+    all-reduce        : 2 * result_bytes * (g-1)/g     (RS + AG phases)
+    all-to-all        : result_bytes * (g-1)/g
+    collective-permute: result_bytes
+
+``collective_bytes`` returns GLOBAL bytes = per-device * num_devices, so the
+roofline term collective_bytes / (chips * link_bw) reduces to per-chip wire
+bytes over per-chip link bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+from repro.roofline.constants import BYTES
+
+# e.g. "  %all-reduce.1 = bf16[16,1024]{1,0} all-reduce(...), replica_groups={{0,1},...}"
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^\s]*)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * BYTES.get(dtype, 4)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota form replica_groups=[num_groups,group_size]<...>
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        elems = [e for e in m.group(1).replace(" ", "").split(",") if e]
+        return max(len(elems), 1)
+    return 1
+
+
+_FACTORS = {
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_device_bytes: float
+    global_bytes: float
+    by_op: dict[str, float]  # per-device bytes per op kind
+    counts: dict[str, int]
+
+    def dominant(self) -> str:
+        return max(self.by_op, key=self.by_op.get) if self.by_op else "none"
+
+
+def collective_stats(hlo_text: str, num_devices: int) -> CollectiveStats:
+    per_dev = 0.0
+    by_op: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    seen_start: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        # -start/-done pairs describe one transfer; count the start only
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        g = _group_size(line)
+        if g <= 1 and op != "collective-permute":
+            continue  # degenerate group: no wire traffic
+        nbytes = _shape_bytes(m.group("type"))
+        if op in ("all-gather", "all-to-all"):
+            # result tuple may include aliased input buffer; HLO convention
+            # here is result == gathered output, fine as-is
+            pass
+        moved = nbytes * _FACTORS[op](g)
+        per_dev += moved
+        by_op[op] += moved
+        counts[op] += 1
+    return CollectiveStats(
+        per_device_bytes=per_dev,
+        global_bytes=per_dev * num_devices,
+        by_op=dict(by_op),
+        counts=dict(counts),
+    )

@@ -1,0 +1,20 @@
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.compression import (
+    compress_tree,
+    decompress_tree,
+    dequantize_int8,
+    init_error,
+    quantize_int8,
+)
+from repro.runtime.elastic import (
+    StragglerMonitor,
+    elastic_remesh,
+    handle_failure,
+    renormalize_strategy,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "compress_tree", "decompress_tree", "dequantize_int8", "init_error", "quantize_int8",
+    "StragglerMonitor", "elastic_remesh", "handle_failure", "renormalize_strategy",
+]

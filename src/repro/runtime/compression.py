@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback.
+
+Motivation (the paper's beta/r cost term applied to training): cross-pod
+data-parallel gradient reduction crosses DCN, the slowest hop in the mesh —
+exactly the link the paper's transmission-delay term prices.  Quantizing
+the cross-pod reduction to int8 cuts that traffic 4x (vs f32 master grads);
+error feedback keeps the bias from accumulating (the compression residual
+is replayed into the next step's gradient).
+
+The codec is layout-preserving (per-tensor symmetric scale), so it composes
+with any sharding: quantize -> psum over the slow axis -> dequantize.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: returns (q int8, scale f32)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, error: Any) -> tuple[Any, Any, Any]:
+    """Quantize (grads + error); returns (q_tree, scale_tree, new_error).
+
+    new_error is the residual (input - dequantized), fed back next step.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, s = quantize_int8(x)
+        return q, s, x - dequantize_int8(q, s)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    q_tree = treedef.unflatten([o[0] for o in out])
+    s_tree = treedef.unflatten([o[1] for o in out])
+    e_tree = treedef.unflatten([o[2] for o in out])
+    return q_tree, s_tree, e_tree
+
+
+def decompress_tree(q_tree: Any, s_tree: Any) -> Any:
+    return jax.tree.map(dequantize_int8, q_tree, s_tree)
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,9 @@
+from repro.serving.batching import FifoBatcher, Request, pad_tokens
+from repro.serving.engine import CollaborativeEngine, ServeStats, StagePrograms
+from repro.serving.steps import make_decode_step, make_prefill_step, select_exit
+
+__all__ = [
+    "FifoBatcher", "Request", "pad_tokens",
+    "CollaborativeEngine", "ServeStats", "StagePrograms",
+    "make_decode_step", "make_prefill_step", "select_exit",
+]

@@ -1,0 +1,68 @@
+"""Request queue + batcher for the collaborative serving engine.
+
+Requests carry their token prompt and bookkeeping (arrival time, current
+stage, exit status).  The batcher groups requests heading to the same stage
+replica into fixed-size padded batches — static shapes for the jit'd stage
+programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # prompt token ids
+    arrival: float
+    # runtime state
+    stage: int = 0
+    node: int = -1
+    hidden: Any = None  # residual stream handed between stages
+    exited: bool = False
+    exit_stage: int = -1
+    output_token: int = -1
+    confidence: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def delay(self) -> float:
+        return self.t_done - self.arrival
+
+
+class FifoBatcher:
+    """Per-replica FIFO with fixed-batch draining."""
+
+    def __init__(self, batch_size: int):
+        self.batch_size = batch_size
+        self.queue: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def drain(self, max_batches: int | None = None) -> list[list[Request]]:
+        batches = []
+        while self.queue and (max_batches is None or len(batches) < max_batches):
+            take = min(self.batch_size, len(self.queue))
+            batches.append([self.queue.popleft() for _ in range(take)])
+        return batches
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+
+def pad_tokens(reqs: list[Request], pad_id: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Right-pad prompts to a common length; returns (tokens [B, S], lengths [B])."""
+    max_len = max(int(r.tokens.shape[0]) for r in reqs)
+    B = len(reqs)
+    out = np.full((B, max_len), pad_id, np.int32)
+    lengths = np.zeros((B,), np.int32)
+    for i, r in enumerate(reqs):
+        n = int(r.tokens.shape[0])
+        out[i, :n] = r.tokens
+        lengths[i] = n
+    return out, lengths

@@ -1,0 +1,284 @@
+"""Collaborative serving engine: the paper's system with a real model inside.
+
+A model is partitioned into ``cfg.num_stages`` stages; each stage ``h`` is
+served by ``n_h`` replica groups (on a real cluster: mesh slices; here:
+logical replicas with Jetson-profiled service rates).  The engine:
+
+  * routes each request hop-by-hop by sampling the DTO-EE offloading
+    strategy ``p`` (the control plane runs the genuine RUR/RUS rounds on a
+    Topology mirroring the replica layout);
+  * runs the REAL stage forward for the data plane — the residual stream is
+    handed replica-to-replica, and exit decisions use the model's actual
+    branch confidences against the thresholds C (not a table);
+  * advances a simulated clock with M/D/1-PS service at each replica, so
+    measured delays follow the same queueing physics the optimizer models.
+
+This is deliberately a single-process, event-stepped engine: the
+distributed *semantics* (who talks to whom, what information each node has)
+are faithful; only the transport is in-process.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import dto_ee
+from repro.core.thresholds import ExitProfile
+from repro.core.types import DtoHyperParams, ModelProfile, Topology
+from repro.models import layers, model as model_lib
+from repro.serving.batching import Request
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Stage programs: jit once per (stage, batch_size)
+# ---------------------------------------------------------------------------
+
+
+class StagePrograms:
+    """Compiled per-stage forwards of a partitioned model."""
+
+    def __init__(self, params: Any, cfg: ArchConfig):
+        self.cfg = cfg
+        self.params = params
+        self._fwd = {}
+
+    def run_stage(self, stage_idx: int, x: jnp.ndarray) -> jnp.ndarray:
+        """Forward hidden states through stage ``stage_idx`` (1-indexed)."""
+        key = ("fwd", stage_idx, x.shape)
+        if key not in self._fwd:
+            cfg = self.cfg
+
+            @jax.jit
+            def fwd(params, x):
+                stage = params["stages"][stage_idx - 1]
+                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+                out, _, _ = model_lib._run_stage(stage, x, cfg, positions, "train")
+                return out
+
+            self._fwd[key] = fwd
+        return self._fwd[key](self.params, x)
+
+    def embed(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        key = ("embed", tokens.shape)
+        if key not in self._fwd:
+            cfg = self.cfg
+
+            @jax.jit
+            def emb(params, tokens):
+                return model_lib._embed_inputs(params, {"tokens": tokens}, cfg)
+
+            self._fwd[key] = emb
+        return self._fwd[key](self.params, tokens)
+
+    def exit_head(self, stage_idx: int, x_last: jnp.ndarray):
+        """(confidence, token) of the exit branch after stage ``stage_idx``."""
+        key = ("exit", stage_idx, x_last.shape)
+        if key not in self._fwd:
+            cfg = self.cfg
+
+            @jax.jit
+            def head(params, x_last):
+                return model_lib.exit_confidence(params, x_last, stage_idx, cfg)
+
+            self._fwd[key] = head
+        return self._fwd[key](self.params, x_last)
+
+    def final_head(self, x_last: jnp.ndarray):
+        key = ("final", x_last.shape)
+        if key not in self._fwd:
+            cfg = self.cfg
+
+            @jax.jit
+            def head(params, x_last):
+                h = layers.apply_norm(cfg.norm, params["final_norm"], x_last)
+                logits = model_lib.lm_logits(params, h, cfg)[:, 0]
+                conf = jax.nn.softmax(logits, axis=-1).max(axis=-1)
+                return conf, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            self._fwd[key] = head
+        return self._fwd[key](self.params, x_last)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServeStats:
+    delays: list[float]
+    exit_stage: list[int]
+    confidences: list[float]
+    tokens: list[int]
+
+    def summary(self) -> dict:
+        d = np.asarray(self.delays)
+        es = np.asarray(self.exit_stage)
+        return {
+            "num_completed": int(d.size),
+            "mean_delay": float(d.mean()) if d.size else float("nan"),
+            "p95_delay": float(np.percentile(d, 95)) if d.size else float("nan"),
+            "exit_histogram": {
+                int(s): int((es == s).sum()) for s in np.unique(es)
+            },
+        }
+
+
+class CollaborativeEngine:
+    """End-to-end: Poisson arrivals -> DTO-EE routing -> staged model."""
+
+    def __init__(
+        self,
+        params: Any,
+        cfg: ArchConfig,
+        topo: Topology,
+        profile: ModelProfile,
+        exit_profile: ExitProfile,
+        hyper: DtoHyperParams | None = None,
+        seed: int = 0,
+    ):
+        if topo.num_stages != cfg.num_stages:
+            raise ValueError("topology stages must match the model's stages")
+        self.programs = StagePrograms(params, cfg)
+        self.cfg = cfg
+        self.topo = topo
+        self.profile = profile
+        self.exit_profile = exit_profile
+        self.hyper = hyper or DtoHyperParams()
+        self.rng = np.random.default_rng(seed)
+        self.state = dto_ee.init_state(topo, profile, exit_profile)
+        self._round_step = dto_ee.make_round_step(topo, profile, self.hyper)
+        self.stage_to_branch = {
+            s: b for b, s in enumerate(exit_profile.branch_stage[:-1])
+        }
+
+    # -- control plane ------------------------------------------------------
+    def update_topology(self, new_topo: Topology) -> None:
+        """Dynamic environment: capacities / arrival rates changed between
+        slots.  The offloading state (p, thresholds) warm-starts; only the
+        jitted round program is rebuilt (mu / rates are baked into it)."""
+        if new_topo.num_edges != self.topo.num_edges:
+            raise ValueError("edge set changed; use runtime.elastic helpers first")
+        self.topo = new_topo
+        self._round_step = dto_ee.make_round_step(new_topo, self.profile, self.hyper)
+
+    def configuration_phase(self, adapt_thresholds: bool = True) -> None:
+        """One time-slot configuration update (Algorithm 3)."""
+        res = dto_ee.run_configuration_phase(
+            self.topo,
+            self.profile,
+            self.exit_profile,
+            self.hyper,
+            state=self.state,
+            adapt_thresholds=adapt_thresholds,
+            round_step=self._round_step,
+        )
+        self.state = res.state
+
+    @property
+    def p(self) -> np.ndarray:
+        return np.asarray(self.state.carry.p, np.float64)
+
+    @property
+    def thresholds(self) -> np.ndarray:
+        return self.state.thresholds
+
+    # -- data plane ---------------------------------------------------------
+    def _route(self, node: int) -> tuple[int, int]:
+        lo, hi = self.topo.edge_offsets[node], self.topo.edge_offsets[node + 1]
+        probs = self.p[lo:hi]
+        s = probs.sum()
+        e = (
+            lo + int(self.rng.choice(hi - lo, p=probs / s))
+            if s > 0
+            else int(self.rng.integers(lo, hi))
+        )
+        return int(self.topo.edge_dst[e]), e
+
+    def serve(
+        self,
+        prompts: list[np.ndarray],
+        duration: float = 5.0,
+        arrival_rate: float | None = None,
+    ) -> ServeStats:
+        """Serve ``prompts`` arriving as a Poisson stream over ``duration``.
+
+        Each request classifies its prompt's next token; exit thresholds are
+        the engine's current C.  Batch size 1 per hop keeps the routing
+        faithful (each request samples its own path); stage forwards are
+        jit-cached per shape so repeated shapes are fast.
+        """
+        topo, profile = self.topo, self.profile
+        H = profile.num_stages
+        eds = topo.nodes_at_stage(0)
+        rate = arrival_rate or float(topo.phi_ext.sum())
+        n = len(prompts)
+        arrivals = np.sort(self.rng.uniform(0.0, duration, size=n))
+
+        stats = ServeStats([], [], [], [])
+        # event heap: (time, seq, request, node) — arrival of request at node
+        heap: list = []
+        seq = itertools.count()
+        queues = {int(v): 0.0 for v in range(topo.num_nodes)}  # busy-until
+
+        for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
+            ed = int(eds[i % len(eds)])
+            req = Request(rid=i, tokens=np.asarray(prompt, np.int32), arrival=t)
+            nxt, e = self._route(ed)
+            t_cm = profile.beta[0] / float(topo.edge_rate[e])
+            heapq.heappush(heap, (t + t_cm, next(seq), req, nxt))
+
+        while heap:
+            now, _, req, node = heapq.heappop(heap)
+            h = int(topo.node_stage[node])
+            # ---- real compute: stage forward -------------------------------
+            if h == 1:
+                x = self.programs.embed(jnp.asarray(req.tokens[None, :]))
+            else:
+                x = req.hidden
+            x = self.programs.run_stage(h, x)
+            req.hidden = x
+
+            # ---- service delay: M/D/1 FIFO approximation -------------------
+            service = profile.alpha[h - 1] / float(topo.mu[node])
+            start = max(now, queues[node])
+            done = start + service
+            queues[node] = done
+
+            # ---- exit decision with REAL confidence ------------------------
+            b = self.stage_to_branch.get(h)
+            exits = False
+            if b is not None:
+                conf, tok = self.programs.exit_head(h, x[:, -1:])
+                c, t_ = float(conf[0]), int(tok[0])
+                if c >= self.thresholds[b]:
+                    exits = True
+            if h == H:
+                conf, tok = self.programs.final_head(x[:, -1:])
+                c, t_ = float(conf[0]), int(tok[0])
+                exits = True
+            if exits:
+                req.exited, req.exit_stage = True, h
+                req.confidence, req.output_token = c, t_
+                req.t_done = done
+                stats.delays.append(req.delay)
+                stats.exit_stage.append(h)
+                stats.confidences.append(c)
+                stats.tokens.append(t_)
+                continue
+
+            # ---- offload onward -------------------------------------------
+            nxt, e = self._route(node)
+            t_cm = profile.beta[h] / float(topo.edge_rate[e])
+            heapq.heappush(heap, (done + t_cm, next(seq), req, nxt))
+
+        return stats

@@ -1,0 +1,69 @@
+"""jit-able serve steps: prefill / decode with fused early-exit selection.
+
+These are the functions the multi-pod dry-run lowers for the inference
+shapes: static shapes, cache-in/cache-out, thresholds as a traced vector so
+one compiled program serves every threshold setting DTO-EE picks.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+
+
+def select_exit(
+    next_token: jnp.ndarray,  # [B] final-head tokens
+    exit_conf: jnp.ndarray,  # [B, n_exits]
+    exit_tok: jnp.ndarray,  # [B, n_exits]
+    thresholds: jnp.ndarray,  # [n_exits]
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Paper's exit rule: first branch with conf >= c_h wins, else final head.
+
+    Returns (token [B], exit_stage_index [B] — n_exits means the final head).
+    """
+    B, n_exits = exit_conf.shape
+    if n_exits == 0:
+        return next_token, jnp.full((B,), 0, jnp.int32)
+    took = exit_conf >= thresholds[None, :]
+    any_took = jnp.any(took, axis=1)
+    first = jnp.argmax(took, axis=1)  # first True (argmax on bool)
+    chosen = jnp.take_along_axis(exit_tok, first[:, None], axis=1)[:, 0]
+    token = jnp.where(any_took, chosen, next_token)
+    stage_idx = jnp.where(any_took, first, n_exits).astype(jnp.int32)
+    return token, stage_idx
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int):
+    def prefill_step(params: Any, batch: dict, thresholds: jnp.ndarray):
+        next_token, exit_conf, exit_tok, caches = model_lib.prefill(
+            params, batch, cfg, max_len
+        )
+        token, stage_idx = select_exit(next_token, exit_conf, exit_tok, thresholds)
+        return {
+            "token": token,
+            "exit_stage": stage_idx,
+            "exit_conf": exit_conf,
+            "caches": caches,
+        }
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params: Any, batch: dict, caches: list, thresholds: jnp.ndarray):
+        next_token, exit_conf, exit_tok, new_caches = model_lib.decode_step(
+            params, batch, caches, cfg
+        )
+        token, stage_idx = select_exit(next_token, exit_conf, exit_tok, thresholds)
+        return {
+            "token": token,
+            "exit_stage": stage_idx,
+            "exit_conf": exit_conf,
+            "caches": new_caches,
+        }
+
+    return decode_step

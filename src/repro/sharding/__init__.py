@@ -1,0 +1,23 @@
+from repro.sharding.specs import (
+    MeshRules,
+    activation_spec,
+    batch_specs,
+    cache_specs,
+    clear_mesh,
+    constrain,
+    get_mesh,
+    param_specs,
+    set_mesh,
+)
+
+__all__ = [
+    "MeshRules",
+    "activation_spec",
+    "batch_specs",
+    "cache_specs",
+    "clear_mesh",
+    "constrain",
+    "get_mesh",
+    "param_specs",
+    "set_mesh",
+]

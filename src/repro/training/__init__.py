@@ -1,0 +1,7 @@
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.train_step import make_train_step, make_compressed_train_step
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "init_opt_state",
+    "make_train_step", "make_compressed_train_step",
+]

@@ -1,0 +1,96 @@
+"""AdamW in pure JAX, with optimizer state sharded like the parameters.
+
+The state tree mirrors the param tree leaf-for-leaf ({"m": ..., "v": ...}),
+so ``sharding.param_specs`` applies unchanged — on the (data, model) mesh
+this is ZeRO-style sharding of (m, v) over the fsdp axis for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * decay
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(
+    params: Any, grads: Any, state: dict, cfg: AdamWConfig
+) -> tuple[Any, dict, dict]:
+    """One AdamW step; returns (params', state', metrics)."""
+    if cfg.grad_clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    step = state["step"] + 1
+    lr = lr_schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    params_new = treedef.unflatten([o[0] for o in out])
+    m_new = treedef.unflatten([o[1] for o in out])
+    v_new = treedef.unflatten([o[2] for o in out])
+    state_new = {"m": m_new, "v": v_new, "step": step}
+    return params_new, state_new, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,171 @@
+"""train_step factory: microbatched, remat'd, sharded loss/grad/update.
+
+``make_train_step(cfg, opt_cfg, microbatches=k)`` returns a function
+``(params, opt_state, batch) -> (params', opt_state', metrics)`` suitable
+for ``jax.jit`` with in/out shardings from ``sharding.param_specs``:
+
+  * the global batch is split into k microbatches scanned sequentially,
+    gradients accumulated in f32 — the standard memory/throughput knob
+    (remat already bounds activation memory inside each stage scan);
+  * optional int8 cross-pod gradient compression (``compress_pod_axis``):
+    gradients are reduced in two hops — GSPMD handles the intra-pod
+    reduction implicitly (batch sharded over "data"), while the slow
+    cross-pod hop runs through the int8 codec inside a partial-auto
+    shard_map over the "pod" axis with error feedback carried in the
+    optimizer state.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.sharding import specs as sharding_specs
+from repro.training import optimizer as opt_lib
+
+
+def _split_microbatches(batch: dict, k: int) -> dict:
+    def resh(x):
+        b = x.shape[0]
+        assert b % k == 0, f"batch {b} not divisible by microbatches {k}"
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    return jax.tree.map(resh, batch)
+
+
+def accumulate_grads(
+    loss_fn: Callable, params: Any, batch: dict, k: int
+) -> tuple[jnp.ndarray, Any, dict]:
+    """Scan over k microbatches; returns (loss, grads, metrics) averaged."""
+    if k <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch
+        )
+        return loss, grads, metrics
+
+    mb = _split_microbatches(batch, k)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def body(carry, mb_batch):
+        acc, loss_sum = carry
+        (loss, metrics), grads = grad_fn(params, mb_batch)
+        acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32) / k, acc, grads
+        )
+        return (acc, loss_sum + loss / k), metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (grads, loss), metrics = jax.lax.scan(body, (zeros, 0.0), mb)
+    metrics = jax.tree.map(lambda m: m.mean(), metrics)
+    return loss, grads, metrics
+
+
+def _cast_matrices(params: Any, dtype) -> Any:
+    """bf16 compute copy of the f32 master weights (cast on the LOCAL shard,
+    so FSDP weight all-gathers move half the bytes).  1-D leaves (norm
+    scales, biases) stay f32."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype)
+        if (p.dtype == jnp.float32 and p.ndim >= 2)
+        else p,
+        params,
+    )
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: opt_lib.AdamWConfig | None = None,
+    microbatches: int = 1,
+    loss_fn: Callable | None = None,
+):
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    inner_loss = loss_fn or (lambda p, b: model_lib.loss_fn(p, b, cfg))
+    if os.environ.get("REPRO_BF16_PARAMS", "0") == "1":
+        base_loss = lambda p, b: inner_loss(_cast_matrices(p, cfg.dtype), b)
+    else:
+        base_loss = inner_loss
+
+    def train_step(params: Any, opt_state: dict, batch: dict):
+        loss, grads, metrics = accumulate_grads(
+            base_loss, params, batch, microbatches
+        )
+        # ZeRO-2 hint: pin gradient sharding to the param layout so the
+        # cross-data reduction lowers as reduce-scatter, not all-reduce.
+        # Gated so the perf iteration can record before/after cleanly.
+        if os.environ.get("REPRO_GRAD_RS", "0") == "1":
+            grads = sharding_specs.constrain_like_params(grads)
+        params_new, opt_new, opt_metrics = opt_lib.adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = dict(metrics, **opt_metrics)
+        return params_new, opt_new, metrics
+
+    return train_step
+
+
+def make_compressed_train_step(
+    cfg: ArchConfig,
+    mesh,
+    opt_cfg: opt_lib.AdamWConfig | None = None,
+    microbatches: int = 1,
+):
+    """Cross-pod int8 gradient reduction (beyond-paper §Perf optimization).
+
+    Requires a mesh with a "pod" axis.  The batch arrives sharded over
+    ("pod", "data"); inside a partial-auto shard_map over "pod", each pod
+    computes its own (intra-pod-reduced, GSPMD) gradients, quantizes them
+    with error feedback, and psums int8 over the pod axis — 4x less DCN
+    traffic than an f32 all-reduce.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.runtime import compression
+
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig()
+    base_loss = lambda p, b: model_lib.loss_fn(p, b, cfg)
+    npods = mesh.shape["pod"]
+    other_axes = frozenset(n for n in mesh.axis_names if n != "pod")
+
+    def train_step(params: Any, opt_state: dict, batch: dict):
+        error = opt_state["error"]
+
+        @functools.partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(P(), P(), P("pod"), P()),
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False,
+            axis_names=frozenset({"pod"}),
+        )
+        def pod_grads(params, error, batch, _dummy):
+            loss, grads, metrics = accumulate_grads(
+                base_loss, params, batch, microbatches
+            )
+            q, s, err_new = compression.compress_tree(grads, error)
+            # int8 payload crosses DCN; accumulate in int32 to avoid overflow
+            q_sum = jax.tree.map(
+                lambda x: jax.lax.psum(x.astype(jnp.int32), "pod"), q
+            )
+            s_max = jax.tree.map(lambda x: jax.lax.pmax(x, "pod"), s)
+            grads_global = jax.tree.map(
+                lambda qi, si: qi.astype(jnp.float32) * si / npods, q_sum, s_max
+            )
+            loss = jax.lax.pmean(loss, "pod")
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, "pod"), metrics)
+            return grads_global, err_new, loss, metrics
+
+        grads, err_new, loss, metrics = pod_grads(
+            params, error, batch, jnp.zeros(())
+        )
+        params_new, opt_new, opt_metrics = opt_lib.adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        opt_new["error"] = err_new
+        return params_new, opt_new, dict(metrics, **opt_metrics)
+
+    return train_step

@@ -1,0 +1,141 @@
+"""Queueing model: flow conservation, Eq. 22 gradient oracle, simulator
+agreement with the analytic M/D/1-PS formulas."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dto_ee, gradients, penalty, queueing, simulator
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import build_edge_network, build_uniform_network
+from repro.core.types import DtoHyperParams, RESNET101_PROFILE
+
+PROFILE = RESNET101_PROFILE
+
+
+def _setup(seed=0, scale=2.0):
+    topo = build_edge_network(seed=seed, profile=PROFILE, arrival_rate_scale=scale)
+    ep = synthetic_validation(seed=seed + 1, profile=PROFILE)
+    ev = ep.evaluate(np.array([0.7, 0.7]))
+    I_node = jnp.asarray(ev.stage_remaining, jnp.float32)[jnp.asarray(topo.node_stage)]
+    return topo, ep, I_node
+
+
+def test_flow_conservation():
+    """Stage-h inflow == upstream outflow x remaining ratios (Eq. 3)."""
+    topo, ep, I_node = _setup()
+    p = dto_ee.uniform_strategy(topo)
+    phi, lam = queueing.steady_state_flows(p, topo, PROFILE, I_node)
+    phi = np.asarray(phi)
+    I_np = np.asarray(I_node)
+    total_in = topo.phi_ext.sum()
+    for h in range(1, PROFILE.num_stages + 1):
+        stage_nodes = topo.nodes_at_stage(h)
+        upstream = topo.nodes_at_stage(h - 1)
+        expected = np.sum(phi[upstream] * I_np[upstream])
+        np.testing.assert_allclose(phi[stage_nodes].sum(), expected, rtol=1e-5)
+    # nothing is created: stage-1 inflow <= total external arrivals
+    assert phi[topo.nodes_at_stage(1)].sum() <= total_in * 1.0001
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=8, deadline=None)
+def test_eq22_analytic_gradient_matches_autodiff(seed):
+    """The paper's dR/dp = (phi I / Phi) Delta (Eq. 22) == jax.grad of R.
+
+    Eq. 22 holds in the stable interior (lam < mu); outside it the
+    implementation intentionally clamps Delta to a large constant (the
+    distributed algorithm's escape signal), so unstable draws are lightened
+    by reducing the arrival scale until stable.
+    """
+    from hypothesis import assume
+
+    topo, ep, I_node = _setup(seed=seed, scale=1.2)
+    hyper = DtoHyperParams()
+    rng = np.random.default_rng(seed)
+    # random feasible interior strategy
+    raw = rng.uniform(0.2, 1.0, topo.num_edges)
+    sums = np.zeros(topo.num_nodes)
+    np.add.at(sums, topo.edge_src, raw)
+    p = jnp.asarray(raw / sums[topo.edge_src], jnp.float32)
+
+    _, lam = queueing.steady_state_flows(p, topo, PROFILE, I_node)
+    # margin keeps autodiff away from the penalty kink at lam == mu - eps
+    mu = np.where(np.isinf(topo.mu), 1e30, topo.mu)
+    assume(bool(np.all(np.asarray(lam) < 0.95 * mu)))
+
+    analytic = gradients.analytic_gradient(p, topo, PROFILE, I_node, hyper)
+    auto = jax.grad(lambda q: penalty.objective_r(q, topo, PROFILE, I_node, hyper))(p)
+    np.testing.assert_allclose(
+        np.asarray(analytic), np.asarray(auto), rtol=2e-2, atol=1e-3
+    )
+
+
+def test_mdps_queue_sim_matches_formula():
+    """A single M/D/1-PS queue's mean sojourn time == alpha/(mu - lambda)."""
+    import dataclasses
+
+    # 1 ED -> 1 ES topology
+    from repro.core.types import ModelProfile, Topology
+
+    prof = ModelProfile(
+        name="one",
+        alpha=(2.0,),
+        beta=(0.001, ),
+        has_exit=(False,),
+        branch_accuracy=(0.6,),
+    )
+    lam_rate = 20.0  # tasks/s
+    mu = 60.0  # GFLOP/s -> rho = 20*2/60 = 0.667
+    topo = Topology(
+        node_stage=np.array([0, 1], np.int32),
+        mu=np.array([np.inf, mu]),
+        phi_ext=np.array([lam_rate, 0.0]),
+        edge_src=np.array([0], np.int32),
+        edge_dst=np.array([1], np.int32),
+        edge_rate=np.array([1e9]),
+        edge_offsets=np.array([0, 1, 1], np.int32),
+    )
+    ep = synthetic_validation(seed=0, profile=prof)
+    sim = simulator.simulate_slot(
+        topo,
+        prof,
+        ep,
+        p=np.array([1.0]),
+        thresholds=np.zeros(0),
+        duration=60.0,
+        seed=3,
+    )
+    expected = prof.alpha[0] / (mu - lam_rate * prof.alpha[0])  # Eq. 6
+    assert sim.completed > 800
+    np.testing.assert_allclose(sim.mean_delay, expected, rtol=0.1)
+
+
+def test_average_delay_matches_simulator_end_to_end():
+    """Analytic T (Eq. 8) within ~12% of the event simulator."""
+    topo, ep, I_node = _setup(scale=2.5)
+    hyper = DtoHyperParams()
+    res = dto_ee.solve(topo, PROFILE, ep, hyper, adapt_thresholds=False)
+    p = res.state.carry.p
+    t_analytic, _, stable = dto_ee.evaluate_strategy(p, topo, PROFILE, I_node, hyper)
+    assert stable
+    thr = np.array([0.7, 0.7])
+    sim = simulator.simulate_slot(
+        topo, PROFILE, ep, np.asarray(p), thr, duration=10.0, seed=9
+    )
+    assert abs(sim.mean_delay - t_analytic) / t_analytic < 0.15
+
+
+def test_unstable_configuration_detected():
+    topo = build_uniform_network(
+        seed=0, profile=PROFILE, num_eds=30, es_per_stage=2,
+        capacity_gflops=10.0, ed_arrival_rate=3.0,
+    )
+    p = dto_ee.uniform_strategy(topo)
+    I_node = jnp.ones(topo.num_nodes)
+    _, lam = queueing.steady_state_flows(p, topo, PROFILE, I_node)
+    assert not bool(queueing.is_stable(topo, lam))
+    t = queueing.compute_delay_per_node(topo, PROFILE, lam)
+    assert bool(jnp.all(jnp.isfinite(t)))  # penalty handles it, no NaN/inf

@@ -1,0 +1,138 @@
+"""DTO-EE algorithm properties: Lemma 1 descent, convergence, beating
+baselines, threshold coupling (Eqs. 17-18)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, dto_ee, gradients, penalty, queueing
+from repro.core.thresholds import synthetic_validation, threshold_step
+from repro.core.topology import build_edge_network
+from repro.core.types import DtoHyperParams, RESNET101_PROFILE
+
+PROFILE = RESNET101_PROFILE
+
+
+def _random_feasible_p(topo, rng):
+    raw = rng.uniform(0.1, 1.0, topo.num_edges)
+    sums = np.zeros(topo.num_nodes)
+    np.add.at(sums, topo.edge_src, raw)
+    return jnp.asarray(raw / sums[topo.edge_src], jnp.float32)
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_lemma1_eq19_is_descent_direction(seed):
+    """<grad R(P), Gamma(P) - P> < 0 unless P is the fixed point (Lemma 1)."""
+    rng = np.random.default_rng(seed)
+    topo = build_edge_network(seed=seed % 5, profile=PROFILE, arrival_rate_scale=2.0)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    I_node = jnp.asarray(ep.evaluate([0.7, 0.7]).stage_remaining, jnp.float32)[
+        jnp.asarray(topo.node_stage)
+    ]
+    hyper = DtoHyperParams()
+    p = _random_feasible_p(topo, rng)
+
+    grad = jax.grad(lambda q: penalty.objective_r(q, topo, PROFILE, I_node, hyper))(p)
+    phi, lam = queueing.steady_state_flows(p, topo, PROFILE, I_node)
+    delta, _ = gradients.backward_recursion(p, topo, PROFILE, I_node, lam, hyper)
+    p_next = dto_ee.eq19_update(p, delta, topo, hyper.tau_p)
+    inner = float(jnp.sum(grad * (p_next - p)))
+    moved = float(jnp.max(jnp.abs(p_next - p)))
+    if moved > 1e-6:
+        assert inner < 0.0
+
+
+def test_objective_decreases_over_rounds():
+    topo = build_edge_network(seed=0, profile=PROFILE, arrival_rate_scale=2.5)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    hyper = DtoHyperParams(rounds=60)
+    res = dto_ee.run_configuration_phase(
+        topo, PROFILE, ep, hyper, adapt_thresholds=False
+    )
+    obj = res.objective_history
+    assert obj[-1] < obj[0]
+    # monotone up to small message-staleness jitter
+    assert np.all(np.diff(obj) < 0.05 * obj[0])
+
+
+def test_probabilities_stay_on_simplex():
+    topo = build_edge_network(seed=2, profile=PROFILE, arrival_rate_scale=2.0)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    res = dto_ee.run_configuration_phase(topo, PROFILE, ep, DtoHyperParams())
+    p = np.asarray(res.state.carry.p)
+    assert np.all(p >= -1e-6) and np.all(p <= 1 + 1e-6)
+    sums = np.zeros(topo.num_nodes)
+    np.add.at(sums, topo.edge_src, p)
+    senders = np.unique(topo.edge_src)
+    np.testing.assert_allclose(sums[senders], 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_dto_ee_beats_static_baselines(seed):
+    """Analytic T of converged DTO-EE <= CF and BF on the same thresholds."""
+    topo = build_edge_network(seed=seed, profile=PROFILE, arrival_rate_scale=2.5)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    hyper = DtoHyperParams()
+    res = dto_ee.solve(topo, PROFILE, ep, hyper, adapt_thresholds=False)
+    I_node = jnp.asarray(res.state.stage_remaining, jnp.float32)[
+        jnp.asarray(topo.node_stage)
+    ]
+    t_dto, _, stable = dto_ee.evaluate_strategy(
+        res.state.carry.p, topo, PROFILE, I_node, hyper
+    )
+    assert stable
+    for p_b in (baselines.computing_first(topo), baselines.bandwidth_first(topo)):
+        t_b, _, _ = dto_ee.evaluate_strategy(p_b, topo, PROFILE, I_node, hyper)
+        assert t_dto < t_b
+
+
+def test_threshold_step_only_moves_when_utility_improves():
+    topo = build_edge_network(seed=0, profile=PROFILE, arrival_rate_scale=2.0)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    hyper = DtoHyperParams()
+    thresholds = np.array([0.8, 0.8])
+    p = dto_ee.uniform_strategy(topo)
+    I_node = jnp.asarray(ep.evaluate(thresholds).stage_remaining, jnp.float32)[
+        jnp.asarray(topo.node_stage)
+    ]
+    phi, lam = queueing.steady_state_flows(p, topo, PROFILE, I_node)
+    _, omega = gradients.backward_recursion(p, topo, PROFILE, I_node, lam, hyper)
+    nodes = topo.nodes_at_stage(ep.branch_stage[0])
+    dec = threshold_step(
+        ep,
+        thresholds,
+        0,
+        np.asarray(phi)[nodes],
+        np.asarray(omega)[nodes],
+        float(topo.phi_ext.sum()),
+        hyper,
+    )
+    if dec.changed:
+        assert dec.delta_u < 0.0
+        assert abs(dec.thresholds[0] - thresholds[0]) == pytest.approx(hyper.tau_c)
+    else:
+        assert np.array_equal(dec.thresholds, thresholds)
+
+
+def test_warm_start_helps_after_perturbation():
+    """After a small environment change, warm-started DTO-EE recovers in one
+    phase to an objective no worse than a cold start gets in one phase."""
+    from repro.core.topology import with_capacity_scale
+
+    topo = build_edge_network(seed=1, profile=PROFILE, arrival_rate_scale=2.0)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    hyper = DtoHyperParams(rounds=30)
+    warm = dto_ee.run_configuration_phase(topo, PROFILE, ep, hyper).state
+
+    topo2 = with_capacity_scale(topo, 0.9)
+    res_warm = dto_ee.run_configuration_phase(
+        topo2, PROFILE, ep, hyper, state=warm
+    )
+    res_cold = dto_ee.run_configuration_phase(topo2, PROFILE, ep, hyper)
+    assert (
+        res_warm.objective_history[-1]
+        <= res_cold.objective_history[-1] * 1.05
+    )

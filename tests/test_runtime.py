@@ -1,0 +1,130 @@
+"""Checkpointing (atomicity, validation) + failure/elastic handling."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dto_ee
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import build_edge_network
+from repro.core.types import DtoHyperParams, RESNET101_PROFILE
+from repro.runtime import (
+    CheckpointManager,
+    elastic_remesh,
+    handle_failure,
+    renormalize_strategy,
+)
+
+PROFILE = RESNET101_PROFILE
+
+
+def _tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "layer": {"w": jax.random.normal(k, (8, 16)), "b": jnp.zeros((16,))},
+        "stack": [jnp.ones((3, 3)), jnp.arange(5, dtype=jnp.int32)],
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(7, tree, extra={"note": "hi"})
+    restored, manifest = mgr.restore(jax.eval_shape(lambda: tree))
+    assert manifest["step"] == 7 and manifest["extra"]["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree())
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]  # gc kept 2
+
+
+def test_checkpoint_rejects_shape_mismatch(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jax.ShapeDtypeStruct((5, 4), jnp.float32)})
+
+
+def test_checkpoint_rejects_missing_leaf(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((4,))})
+    with pytest.raises((KeyError, ValueError)):
+        mgr.restore({"q": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_checkpoint_torn_write_invisible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    # simulate a torn write: tmp dir left behind by a crashed process
+    os.makedirs(tmp_path / "step_00000009.tmp-999", exist_ok=True)
+    assert mgr.latest_step() == 1
+    restored, manifest = mgr.restore(jax.eval_shape(_tree))
+    assert manifest["step"] == 1
+
+
+# ---------------------------------------------------------------------------
+# failure / elastic
+# ---------------------------------------------------------------------------
+
+
+def _net(seed=0):
+    topo = build_edge_network(seed=seed, profile=PROFILE, arrival_rate_scale=2.0)
+    ep = synthetic_validation(seed=1, profile=PROFILE)
+    res = dto_ee.solve(topo, PROFILE, ep, DtoHyperParams(), adapt_thresholds=False)
+    return topo, ep, np.asarray(res.state.carry.p)
+
+
+def test_failure_renormalizes_to_simplex():
+    topo, ep, p = _net()
+    victim = int(topo.nodes_at_stage(2)[0])
+    topo2, p2 = handle_failure(topo, p, victim)
+    assert victim not in set(topo2.edge_dst.tolist())
+    sums = np.zeros(topo2.num_nodes)
+    np.add.at(sums, topo2.edge_src, p2)
+    senders = np.unique(topo2.edge_src)
+    np.testing.assert_allclose(sums[senders], 1.0, atol=1e-9)
+
+
+def test_failure_then_rebalance_restores_stability():
+    import jax.numpy as jnp
+
+    from repro.core import queueing
+
+    topo, ep, p = _net()
+    victim = int(topo.nodes_at_stage(2)[0])
+    topo2, p2 = handle_failure(topo, p, victim)
+    res = dto_ee.solve(topo2, PROFILE, ep, DtoHyperParams(), adapt_thresholds=False)
+    I_node = jnp.ones(topo2.num_nodes)
+    _, lam = queueing.steady_state_flows(res.state.carry.p, topo2, PROFILE, I_node)
+    assert bool(queueing.is_stable(topo2, lam))
+
+
+def test_elastic_remesh_adds_replicas_and_keeps_mass():
+    topo, ep, p = _net()
+    n_before = len(topo.nodes_at_stage(2))
+    topo3, p3 = elastic_remesh(topo, p, stage=2, add_replicas=2)
+    assert len(topo3.nodes_at_stage(2)) == n_before + 2
+    topo3.validate()
+    sums = np.zeros(topo3.num_nodes)
+    np.add.at(sums, topo3.edge_src, p3)
+    senders = np.unique(topo3.edge_src)
+    np.testing.assert_allclose(sums[senders], 1.0, atol=1e-9)
+
+
+def test_renormalize_uniform_fallback():
+    topo, _, p = _net()
+    z = np.zeros_like(p)  # degenerate: every source lost its mass
+    p2 = renormalize_strategy(topo, z)
+    sums = np.zeros(topo.num_nodes)
+    np.add.at(sums, topo.edge_src, p2)
+    senders = np.unique(topo.edge_src)
+    np.testing.assert_allclose(sums[senders], 1.0, atol=1e-9)

@@ -1,0 +1,115 @@
+"""Serving engine + steps: end-to-end on a tiny real model."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.profiles import profile_from_arch, stage_param_counts
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import build_edge_network, NetworkSpec
+from repro.core.types import DtoHyperParams
+from repro.models import model as model_lib
+from repro.serving import CollaborativeEngine, select_exit
+from repro.serving.batching import FifoBatcher, Request, pad_tokens
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("stablelm-1.6b").reduced(vocab_size=128)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    profile = profile_from_arch(cfg)
+    topo = build_edge_network(
+        seed=0, profile=profile, spec=NetworkSpec(num_eds=4, es_per_stage=(2, 2))
+    )
+    ep = synthetic_validation(seed=1, profile=profile)
+    return CollaborativeEngine(
+        params, cfg, topo, profile, ep, DtoHyperParams(rounds=20), seed=0
+    )
+
+
+def _prompts(n, vocab=128, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=12).astype(np.int32) for _ in range(n)]
+
+
+def test_engine_completes_all_requests(engine):
+    engine.configuration_phase()
+    stats = engine.serve(_prompts(8), duration=1.0)
+    s = stats.summary()
+    assert s["num_completed"] == 8
+    assert np.isfinite(s["mean_delay"])
+    assert all(t >= 0 for t in stats.tokens)
+
+
+def test_threshold_zero_exits_at_first_branch(engine):
+    engine.state.thresholds = np.zeros_like(engine.state.thresholds)
+    stats = engine.serve(_prompts(6), duration=1.0)
+    first_exit = engine.exit_profile.branch_stage[0]
+    assert all(s == first_exit for s in stats.exit_stage)
+
+
+def test_threshold_above_one_never_exits_early(engine):
+    engine.state.thresholds = np.full_like(engine.state.thresholds, 1.01)
+    stats = engine.serve(_prompts(6), duration=1.0)
+    H = engine.profile.num_stages
+    assert all(s == H for s in stats.exit_stage)
+
+
+# ---------------------------------------------------------------------------
+# select_exit (the fused serve-step rule)
+# ---------------------------------------------------------------------------
+
+
+def test_select_exit_first_confident_branch_wins():
+    next_token = jnp.asarray([7, 8, 9], jnp.int32)
+    conf = jnp.asarray([[0.9, 0.1], [0.2, 0.95], [0.1, 0.2]])
+    toks = jnp.asarray([[1, 2], [3, 4], [5, 6]], jnp.int32)
+    thr = jnp.asarray([0.8, 0.8])
+    tok, stage = select_exit(next_token, conf, toks, thr)
+    assert tok.tolist() == [1, 4, 9]
+    assert stage.tolist() == [0, 1, 2]  # 2 == n_exits == final head
+
+
+def test_select_exit_no_branches():
+    next_token = jnp.asarray([3], jnp.int32)
+    tok, stage = select_exit(
+        next_token, jnp.zeros((1, 0)), jnp.zeros((1, 0), jnp.int32), jnp.zeros((0,))
+    )
+    assert tok.tolist() == [3]
+
+
+# ---------------------------------------------------------------------------
+# batching utilities
+# ---------------------------------------------------------------------------
+
+
+def test_fifo_batcher_drains_in_order():
+    b = FifoBatcher(batch_size=3)
+    for i in range(7):
+        b.push(Request(rid=i, tokens=np.arange(4), arrival=float(i)))
+    batches = b.drain()
+    assert [len(x) for x in batches] == [3, 3, 1]
+    assert [r.rid for r in batches[0]] == [0, 1, 2]
+    assert len(b) == 0
+
+
+def test_pad_tokens():
+    reqs = [
+        Request(rid=0, tokens=np.array([1, 2, 3]), arrival=0.0),
+        Request(rid=1, tokens=np.array([4]), arrival=0.0),
+    ]
+    out, lengths = pad_tokens(reqs)
+    assert out.shape == (2, 3)
+    assert lengths.tolist() == [3, 1]
+    assert out[1].tolist() == [4, 0, 0]
+
+
+def test_stage_param_counts_sum_close_to_total():
+    cfg = get_config("glm4-9b")
+    stages = sum(stage_param_counts(cfg))
+    total = cfg.param_count()
+    # embed + lm_head excluded from stage counts
+    non_stage = 2 * cfg.vocab_size * cfg.d_model
+    assert abs(stages - (total - non_stage)) / total < 0.02

@@ -1,0 +1,67 @@
+"""Accuracy-ratio table (reuse-based one-shot evaluation): invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.thresholds import synthetic_validation
+from repro.core.types import BERT_PROFILE, RESNET101_PROFILE
+
+
+@pytest.fixture(scope="module")
+def ep():
+    return synthetic_validation(seed=0, profile=RESNET101_PROFILE)
+
+
+def test_extremes(ep):
+    """c=1 -> nobody exits early (A_max); c=0 -> everyone exits at branch 0."""
+    hi = ep.evaluate(np.ones(ep.num_early_branches))
+    assert hi.exit_fraction[-1] == pytest.approx(1.0)
+    assert hi.accuracy == pytest.approx(ep.acc_max)
+    lo = ep.evaluate(np.zeros(ep.num_early_branches))
+    assert lo.exit_fraction[0] == pytest.approx(1.0)
+    assert lo.accuracy == pytest.approx(ep.acc_min)
+
+
+@given(
+    c=st.tuples(
+        st.floats(0.0, 1.0, allow_nan=False), st.floats(0.0, 1.0, allow_nan=False)
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_exit_fractions_partition(ep, c):
+    ev = ep.evaluate(np.asarray(c))
+    assert ev.exit_fraction.sum() == pytest.approx(1.0)
+    assert np.all(ev.exit_fraction >= 0)
+    assert np.all(ev.stage_remaining >= 0) and np.all(ev.stage_remaining <= 1)
+
+
+def test_remaining_ratio_monotone_in_threshold(ep):
+    """Raising c_b keeps more tasks in the pipeline at stage b."""
+    rs = [
+        ep.evaluate([c, 0.8]).stage_remaining[ep.branch_stage[0]]
+        for c in (0.2, 0.5, 0.8, 1.0)
+    ]
+    assert all(a <= b + 1e-12 for a, b in zip(rs, rs[1:]))
+
+
+def test_accuracy_monotone_under_synthetic_defaults(ep):
+    """With the tuned defaults the paper's tradeoff holds: higher thresholds
+    -> higher accuracy (so lowering c trades accuracy for delay)."""
+    accs = [ep.evaluate([c, c]).accuracy for c in (0.0, 0.4, 0.7, 1.0)]
+    assert all(a <= b + 0.01 for a, b in zip(accs, accs[1:]))
+
+
+def test_accuracy_ratio_table_consistency(ep):
+    """Table screening == direct evaluation (the reuse trick is exact)."""
+    grid = np.array([0.5, 0.8])
+    table = ep.accuracy_ratio_table(grid)
+    for combo, ev in table.items():
+        direct = ep.evaluate(np.asarray(combo))
+        assert ev.accuracy == pytest.approx(direct.accuracy)
+        np.testing.assert_allclose(ev.stage_remaining, direct.stage_remaining)
+
+
+def test_bert_profile_has_three_branches():
+    ep_b = synthetic_validation(seed=0, profile=BERT_PROFILE)
+    assert ep_b.num_early_branches == 3
+    assert ep_b.branch_stage == (2, 3, 4, 5)
