@@ -1,0 +1,17 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench lint
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# serving throughput + vectorized simulator; writes BENCH_serving.json
+bench:
+	$(PYTHON) benchmarks/serving_throughput.py
+
+# syntax check of every tree (no third-party linter baked into the image;
+# swap in ruff/pyflakes here once available)
+lint:
+	$(PYTHON) -m compileall -q src tests benchmarks examples

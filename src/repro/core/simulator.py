@@ -37,40 +37,117 @@ class SimResult:
 
 
 class _PSQueue:
-    """Single-server processor-sharing queue with deterministic job sizes."""
+    """Single-server processor-sharing queue with deterministic job sizes.
 
-    __slots__ = ("mu", "jobs", "t", "version")
+    Membership lives in flat numpy arrays (``_ids`` / ``_rem``, swap-remove
+    on departure) so ``advance`` — the simulator's hot loop, called on every
+    event touching the queue — is one vectorized subtraction instead of a
+    per-job Python dict walk, and finished jobs are harvested in one
+    ``pop_done`` mask rather than a per-item scan.
+    """
 
-    def __init__(self, mu: float):
+    __slots__ = ("mu", "t", "version", "_ids", "_rem", "_slot", "_n", "_min_slot")
+
+    def __init__(self, mu: float, capacity: int = 64):
         self.mu = mu
-        self.jobs: dict[int, float] = {}  # job id -> remaining GFLOPs
         self.t = 0.0
         self.version = 0
+        self._ids = np.empty(capacity, np.int64)
+        self._rem = np.empty(capacity, np.float64)
+        self._slot: dict[int, int] = {}  # job id -> slot in the arrays
+        self._n = 0
+        # cached argmin slot (-1 = unknown).  PS decrements are uniform, so
+        # the ordering of remaining works only changes on add/remove — adds
+        # update the cache in O(1) and next_completion avoids an O(n) scan
+        # per event.
+        self._min_slot = -1
+
+    def __len__(self) -> int:
+        return self._n
 
     def advance(self, now: float) -> None:
-        n = len(self.jobs)
-        if n:
-            dec = self.mu / n * (now - self.t)
-            for j in self.jobs:
-                self.jobs[j] -= dec
+        if self._n:
+            self._rem[: self._n] -= self.mu / self._n * (now - self.t)
         self.t = now
 
     def add(self, now: float, job: int, work: float) -> None:
         self.advance(now)
-        self.jobs[job] = work
+        if self._n == self._ids.shape[0]:
+            self._ids = np.concatenate([self._ids, np.empty_like(self._ids)])
+            self._rem = np.concatenate([self._rem, np.empty_like(self._rem)])
+        slot = self._n
+        self._ids[slot] = job
+        self._rem[slot] = work
+        self._slot[job] = slot
+        self._n += 1
+        if self._min_slot >= 0 and work < self._rem[self._min_slot]:
+            self._min_slot = slot
         self.version += 1
+
+    def _drop_slot(self, slot: int) -> None:
+        last = self._n - 1
+        if self._min_slot == slot:
+            self._min_slot = -1
+        elif self._min_slot == last:
+            self._min_slot = slot
+        if slot != last:
+            self._ids[slot] = self._ids[last]
+            self._rem[slot] = self._rem[last]
+            self._slot[int(self._ids[slot])] = slot
+        self._n = last
 
     def remove(self, now: float, job: int) -> None:
         self.advance(now)
-        self.jobs.pop(job, None)
+        slot = self._slot.pop(job, None)
+        if slot is None:
+            return
+        self._drop_slot(slot)
         self.version += 1
 
+    def pop_done(self, eps: float = 1e-12) -> list[int]:
+        """Remove and return every job with no remaining work (one mask scan,
+        then swap-remove per finished job — descending so slots stay valid)."""
+        n = self._n
+        if not n:
+            return []
+        idx = np.nonzero(self._rem[:n] <= eps)[0]
+        if not idx.size:
+            return []
+        done = []
+        for slot in idx[::-1].tolist():
+            j = int(self._ids[slot])
+            done.append(j)
+            del self._slot[j]
+            self._drop_slot(slot)
+        self.version += 1
+        return done
+
+    def pop_overdue(self, now: float) -> list[int]:
+        """Force-complete the earliest job if its completion time is <= now.
+
+        Floating-point residue can leave a finished job's remaining work a
+        hair above the ``pop_done`` eps while its completion event has
+        already fired; without this the candidate event re-schedules itself
+        at a frozen clock and the event loop livelocks.
+        """
+        nxt = self.next_completion()
+        if nxt is None or nxt[0] > now:
+            return []
+        job = nxt[1]
+        self._drop_slot(self._slot.pop(job))
+        self.version += 1
+        return [job]
+
     def next_completion(self) -> tuple[float, int] | None:
-        if not self.jobs:
+        if not self._n:
             return None
-        job = min(self.jobs, key=self.jobs.__getitem__)
-        n = len(self.jobs)
-        return self.t + max(self.jobs[job], 0.0) * n / self.mu, job
+        if self._min_slot < 0:
+            self._min_slot = int(np.argmin(self._rem[: self._n]))
+        i = self._min_slot
+        return (
+            self.t + max(float(self._rem[i]), 0.0) * self._n / self.mu,
+            int(self._ids[i]),
+        )
 
 
 @dataclasses.dataclass
@@ -83,18 +160,36 @@ class _Task:
     t_enter_stage: float = 0.0
 
 
-def _sample_next(
-    rng: np.random.Generator, topo: Topology, p: np.ndarray, node: int
-) -> tuple[int, int]:
-    """Sample a successor edge for ``node`` per the offloading strategy."""
-    lo, hi = topo.edge_offsets[node], topo.edge_offsets[node + 1]
-    probs = p[lo:hi]
-    s = probs.sum()
-    if s <= 0:
-        e = int(rng.integers(lo, hi))
-    else:
-        e = lo + int(rng.choice(hi - lo, p=probs / s))
-    return int(topo.edge_dst[e]), e
+class RoutingCdf:
+    """Per-strategy cache of the routing CDF over every node's out-edges.
+
+    Successor sampling is one inverse-CDF draw (``searchsorted`` into the
+    node's precomputed cumsum slice) instead of an ``rng.choice(p=...)``
+    call — the simulator samples once per task-hop, so this is hot.
+    """
+
+    def __init__(self, topo: Topology, p: np.ndarray):
+        self.topo = topo
+        self.cdf = np.cumsum(np.asarray(p, np.float64))
+        # per-node total mass: cdf[hi-1] - (cdf[lo-1] if lo else 0)
+        off = topo.edge_offsets
+
+        def _at(i: int) -> float:
+            return float(self.cdf[i - 1]) if i > 0 else 0.0
+
+        self.lo_mass = np.array([_at(int(o)) for o in off[:-1]])
+        self.hi_mass = np.array([_at(int(o)) for o in off[1:]])
+
+    def sample(self, rng: np.random.Generator, node: int) -> tuple[int, int]:
+        topo = self.topo
+        lo, hi = int(topo.edge_offsets[node]), int(topo.edge_offsets[node + 1])
+        m_lo, m_hi = self.lo_mass[node], self.hi_mass[node]
+        if m_hi - m_lo <= 0:
+            e = int(rng.integers(lo, hi))
+        else:
+            r = m_lo + rng.random() * (m_hi - m_lo)
+            e = min(int(np.searchsorted(self.cdf[lo:hi], r, side="right")) + lo, hi - 1)
+        return int(topo.edge_dst[e]), e
 
 
 def simulate_slot(
@@ -155,10 +250,15 @@ def simulate_slot(
     stage_time = np.zeros(H + 1, np.float64)
     generated = 0
 
-    def routing(now: float) -> np.ndarray:
+    route_cdf = RoutingCdf(topo, p)
+    route_cdf_old = (
+        RoutingCdf(topo, strategy_switch[1]) if strategy_switch is not None else None
+    )
+
+    def routing(now: float) -> RoutingCdf:
         if strategy_switch is not None and now < strategy_switch[0]:
-            return strategy_switch[1]
-        return p
+            return route_cdf_old
+        return route_cdf
 
     def schedule_completion(now: float, node: int) -> None:
         q = queues[node]
@@ -185,7 +285,7 @@ def simulate_slot(
 
     def send(now: float, task: _Task, node: int) -> None:
         """Offload from ``node`` to a sampled successor (transmission hop)."""
-        nxt, e = _sample_next(rng, topo, routing(now), node)
+        nxt, e = routing(now).sample(rng, node)
         h_next = int(topo.node_stage[nxt])
         beta = profile.beta[h_next - 1]
         t_cm = beta / float(topo.edge_rate[e])
@@ -227,10 +327,9 @@ def simulate_slot(
             if version != q.version:
                 continue  # stale
             q.advance(now)
-            done = [j for j, rem in q.jobs.items() if rem <= 1e-12]
-            for j in done:
-                q.jobs.pop(j)
-            q.version += 1
+            done = q.pop_done()
+            if not done:
+                done = q.pop_overdue(now)
             schedule_completion(now, node)
             for j in done:
                 task = tasks.get(j)

@@ -118,12 +118,21 @@ def build_lowered(cfg, shape, mesh, microbatches: int = 1, policy: str = "dp_tp"
         )
 
 
+def _cost_dict(compiled) -> dict:
+    """compiled.cost_analysis() across the jax return-type change (older
+    versions hand back a one-element list of dicts, newer a plain dict)."""
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _compile_costs(cfg, shape, mesh, microbatches: int = 1, policy: str = "dp_tp"):
     """compile; returns (per_device_flops, per_device_bytes, coll_stats)."""
     num_devices = int(np.prod(list(mesh.shape.values())))
     lowered = build_lowered(cfg, shape, mesh, microbatches, policy)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_stats(compiled.as_text(), num_devices)
     return (
         float(cost.get("flops", 0.0)),
@@ -177,7 +186,7 @@ def gate_cell(
         }
     except Exception as e:
         mem_info = {"error": str(e)}
-    cost = compiled.cost_analysis() or {}
+    cost = _cost_dict(compiled)
     coll = collective_stats(compiled.as_text(), num_devices)
     return {
         "gate": "ok",

@@ -29,6 +29,12 @@ def main() -> None:
     ap.add_argument("--slot-seconds", type=float, default=5.0)
     ap.add_argument("--requests-per-slot", type=int, default=24)
     ap.add_argument("--num-eds", type=int, default=8)
+    ap.add_argument(
+        "--batch-size",
+        type=int,
+        default=8,
+        help="per-replica micro-batch width for the data plane",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,7 +59,12 @@ def main() -> None:
         engine.configuration_phase()
         reqs = poisson_requests(cfg, rcfg, args.slot_seconds)
         prompts = [tok for _, tok in reqs][: args.requests_per_slot]
-        stats = engine.serve(prompts, duration=args.slot_seconds)
+        stats = engine.serve(
+            prompts,
+            duration=args.slot_seconds,
+            arrival_rate=rcfg.arrival_rate,
+            batch_size=args.batch_size,
+        )
         s = stats.summary()
         print(
             f"slot {slot}: {s['num_completed']} done  "

@@ -364,15 +364,27 @@ def lm_logits(params: Params, hidden: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarr
     return layers.matmul(hidden, _head_matrix(params, cfg)).astype(jnp.float32)
 
 
-def exit_confidence(params: Params, hidden: jnp.ndarray, stage: int, cfg: ArchConfig):
-    """(confidence, argmax) of exit branch b_h on [B, 1, d] hidden states.
+def _head_confidence(params: Params, norm_params, hidden: jnp.ndarray, cfg: ArchConfig):
+    """(confidence, argmax) of one LM-head branch on [B, 1, d] hidden states.
 
-    Routed through kernels.ops so the fused Pallas head is used on TPU.
+    Routed through kernels.ops so the fused Pallas head is used on TPU —
+    [B, vocab] logits are never materialized.
     """
     from repro.kernels import ops as kernel_ops
 
-    h = layers.apply_norm(cfg.norm, params["exit_norms"][f"exit_{stage}"], hidden[:, 0])
+    h = layers.apply_norm(cfg.norm, norm_params, hidden[:, 0])
     return kernel_ops.exit_confidence(h, _head_matrix(params, cfg))
+
+
+def exit_confidence(params: Params, hidden: jnp.ndarray, stage: int, cfg: ArchConfig):
+    """(confidence, argmax) of exit branch b_h on [B, 1, d] hidden states."""
+    return _head_confidence(params, params["exit_norms"][f"exit_{stage}"], hidden, cfg)
+
+
+def final_confidence(params: Params, hidden: jnp.ndarray, cfg: ArchConfig):
+    """(confidence, argmax) of the final head — the mandatory exit shares the
+    early branches' fused path."""
+    return _head_confidence(params, params["final_norm"], hidden, cfg)
 
 
 def chunked_xent(

@@ -1,9 +1,27 @@
-from repro.serving.batching import FifoBatcher, Request, pad_tokens
+from repro.serving.batching import (
+    FifoBatcher,
+    Request,
+    ShapeBucketBatcher,
+    batch_tokens,
+    pad_tokens,
+    padded_batch_size,
+)
 from repro.serving.engine import CollaborativeEngine, ServeStats, StagePrograms
-from repro.serving.steps import make_decode_step, make_prefill_step, select_exit
+from repro.serving.steps import (
+    make_decode_step,
+    make_embed_step,
+    make_exit_head_step,
+    make_final_head_step,
+    make_prefill_step,
+    make_stage_forward,
+    select_exit,
+)
 
 __all__ = [
-    "FifoBatcher", "Request", "pad_tokens",
+    "FifoBatcher", "Request", "ShapeBucketBatcher", "batch_tokens",
+    "pad_tokens", "padded_batch_size",
     "CollaborativeEngine", "ServeStats", "StagePrograms",
-    "make_decode_step", "make_prefill_step", "select_exit",
+    "make_decode_step", "make_embed_step", "make_exit_head_step",
+    "make_final_head_step", "make_prefill_step", "make_stage_forward",
+    "select_exit",
 ]

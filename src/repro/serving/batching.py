@@ -4,12 +4,19 @@ Requests carry their token prompt and bookkeeping (arrival time, current
 stage, exit status).  The batcher groups requests heading to the same stage
 replica into fixed-size padded batches — static shapes for the jit'd stage
 programs.
+
+``ShapeBucketBatcher`` is the per-replica queue of the micro-batched data
+plane: requests are bucketed by input shape (prompt length at stage 1, the
+residual-stream shape beyond), each bucket is a ``FifoBatcher``, and batches
+drain FIFO *across* buckets — the bucket holding the oldest waiting request
+goes first, so an odd shape can't be starved by a hot one.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
-from typing import Any
+from typing import Any, Hashable
 
 import numpy as np
 
@@ -55,6 +62,45 @@ class FifoBatcher:
         return len(self.queue)
 
 
+class ShapeBucketBatcher:
+    """Shape-bucketed FIFO batching for one replica.
+
+    Each distinct input shape gets its own ``FifoBatcher``; ``pop_batch``
+    serves the bucket whose head request has waited longest (FIFO across
+    buckets), taking at most ``batch_size`` requests of that one shape so
+    the padded batch stays rectangular.
+    """
+
+    def __init__(self, batch_size: int):
+        self.batch_size = batch_size
+        self.buckets: dict[Hashable, FifoBatcher] = {}
+        self._seqs: dict[Hashable, deque[int]] = {}
+        self._push_seq = itertools.count()
+
+    def push(self, key: Hashable, req: Request) -> None:
+        bucket = self.buckets.get(key)
+        if bucket is None:
+            bucket = self.buckets[key] = FifoBatcher(self.batch_size)
+            self._seqs[key] = deque()
+        bucket.push(req)
+        self._seqs[key].append(next(self._push_seq))
+
+    def pop_batch(self) -> tuple[Hashable, list[Request]] | None:
+        """Drain one batch from the longest-waiting bucket, or None if idle."""
+        heads = [(s[0], k) for k, s in self._seqs.items() if s]
+        if not heads:
+            return None
+        _, key = min(heads)
+        batch = self.buckets[key].drain(max_batches=1)[0]
+        seqs = self._seqs[key]
+        for _ in batch:
+            seqs.popleft()
+        return key, batch
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self.buckets.values())
+
+
 def pad_tokens(reqs: list[Request], pad_id: int = 0) -> tuple[np.ndarray, np.ndarray]:
     """Right-pad prompts to a common length; returns (tokens [B, S], lengths [B])."""
     max_len = max(int(r.tokens.shape[0]) for r in reqs)
@@ -66,3 +112,26 @@ def pad_tokens(reqs: list[Request], pad_id: int = 0) -> tuple[np.ndarray, np.nda
         out[i, :n] = r.tokens
         lengths[i] = n
     return out, lengths
+
+
+def padded_batch_size(n: int, batch_size: int) -> int:
+    """Static batch dim for ``n`` live rows: next power of two, capped at
+    ``batch_size`` — bounds the jit cache to log2(batch_size) entries per
+    shape bucket while not paying the full batch for stragglers."""
+    if n >= batch_size:
+        return batch_size
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, batch_size)
+
+
+def batch_tokens(reqs: list[Request], batch_size: int, pad_id: int = 0) -> np.ndarray:
+    """Stack same-length prompts into a padded [B, S] token batch."""
+    toks, _ = pad_tokens(reqs, pad_id)
+    B = padded_batch_size(len(reqs), batch_size)
+    if B > len(reqs):
+        toks = np.concatenate(
+            [toks, np.full((B - len(reqs), toks.shape[1]), pad_id, np.int32)]
+        )
+    return toks

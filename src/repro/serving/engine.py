@@ -10,8 +10,19 @@ logical replicas with Jetson-profiled service rates).  The engine:
   * runs the REAL stage forward for the data plane — the residual stream is
     handed replica-to-replica, and exit decisions use the model's actual
     branch confidences against the thresholds C (not a table);
-  * advances a simulated clock with M/D/1-PS service at each replica, so
+  * advances a simulated clock with M/D/1 FIFO service at each replica, so
     measured delays follow the same queueing physics the optimizer models.
+
+Data plane (micro-batched): each replica owns a ``ShapeBucketBatcher``.
+Requests landing on a busy replica queue up; whenever the replica frees, it
+drains one shape-bucketed batch (up to ``batch_size`` requests of one input
+shape), runs a single jitted stage forward for the whole padded batch, and
+makes the batched exit decision in one device call — both the early-exit
+branches and the final head go through the fused ``exit_confidence`` kernel,
+so ``[B, vocab]`` logits never touch HBM on either path.  ``batch_size=1``
+reproduces the sequential per-request engine exactly (same clock, same
+exits); larger batches trade a little simulated queueing delay for an
+order-of-magnitude fewer device dispatches.
 
 This is deliberately a single-process, event-stepped engine: the
 distributed *semantics* (who talks to whom, what information each node has)
@@ -26,86 +37,61 @@ from typing import Any
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import dto_ee
+from repro.core.simulator import RoutingCdf
 from repro.core.thresholds import ExitProfile
 from repro.core.types import DtoHyperParams, ModelProfile, Topology
-from repro.models import layers, model as model_lib
-from repro.serving.batching import Request
-from repro.sharding import constrain
+from repro.serving import steps
+from repro.serving.batching import (
+    Request,
+    ShapeBucketBatcher,
+    batch_tokens,
+    padded_batch_size,
+)
 
 
 # ---------------------------------------------------------------------------
-# Stage programs: jit once per (stage, batch_size)
+# Stage programs: one jitted program per stage / head, traced per batch shape
 # ---------------------------------------------------------------------------
 
 
 class StagePrograms:
-    """Compiled per-stage forwards of a partitioned model."""
+    """Compiled per-stage forwards + fused heads of a partitioned model.
+
+    One jitted callable per stage and per head; jax re-traces per input
+    shape, so every (stage, padded-batch shape) bucket compiles once and is
+    then served from the executable cache.
+    """
 
     def __init__(self, params: Any, cfg: ArchConfig):
         self.cfg = cfg
         self.params = params
-        self._fwd = {}
+        self._embed = steps.make_embed_step(cfg)
+        self._stage = {}
+        self._exit = {}
+        self._final = steps.make_final_head_step(cfg)
+
+    def embed(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        return self._embed(self.params, tokens)
 
     def run_stage(self, stage_idx: int, x: jnp.ndarray) -> jnp.ndarray:
         """Forward hidden states through stage ``stage_idx`` (1-indexed)."""
-        key = ("fwd", stage_idx, x.shape)
-        if key not in self._fwd:
-            cfg = self.cfg
-
-            @jax.jit
-            def fwd(params, x):
-                stage = params["stages"][stage_idx - 1]
-                positions = jnp.arange(x.shape[1], dtype=jnp.int32)
-                out, _, _ = model_lib._run_stage(stage, x, cfg, positions, "train")
-                return out
-
-            self._fwd[key] = fwd
-        return self._fwd[key](self.params, x)
-
-    def embed(self, tokens: jnp.ndarray) -> jnp.ndarray:
-        key = ("embed", tokens.shape)
-        if key not in self._fwd:
-            cfg = self.cfg
-
-            @jax.jit
-            def emb(params, tokens):
-                return model_lib._embed_inputs(params, {"tokens": tokens}, cfg)
-
-            self._fwd[key] = emb
-        return self._fwd[key](self.params, tokens)
+        if stage_idx not in self._stage:
+            self._stage[stage_idx] = steps.make_stage_forward(self.cfg, stage_idx)
+        return self._stage[stage_idx](self.params, x)
 
     def exit_head(self, stage_idx: int, x_last: jnp.ndarray):
         """(confidence, token) of the exit branch after stage ``stage_idx``."""
-        key = ("exit", stage_idx, x_last.shape)
-        if key not in self._fwd:
-            cfg = self.cfg
-
-            @jax.jit
-            def head(params, x_last):
-                return model_lib.exit_confidence(params, x_last, stage_idx, cfg)
-
-            self._fwd[key] = head
-        return self._fwd[key](self.params, x_last)
+        if stage_idx not in self._exit:
+            self._exit[stage_idx] = steps.make_exit_head_step(self.cfg, stage_idx)
+        return self._exit[stage_idx](self.params, x_last)
 
     def final_head(self, x_last: jnp.ndarray):
-        key = ("final", x_last.shape)
-        if key not in self._fwd:
-            cfg = self.cfg
-
-            @jax.jit
-            def head(params, x_last):
-                h = layers.apply_norm(cfg.norm, params["final_norm"], x_last)
-                logits = model_lib.lm_logits(params, h, cfg)[:, 0]
-                conf = jax.nn.softmax(logits, axis=-1).max(axis=-1)
-                return conf, jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-            self._fwd[key] = head
-        return self._fwd[key](self.params, x_last)
+        """(confidence, token) of the final head — fused, no [B, vocab] logits."""
+        return self._final(self.params, x_last)
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +105,9 @@ class ServeStats:
     exit_stage: list[int]
     confidences: list[float]
     tokens: list[int]
+    rids: list[int] = dataclasses.field(default_factory=list)
+    num_batches: int = 0
+    num_forward_rows: int = 0  # padded rows pushed through stage forwards
 
     def summary(self) -> dict:
         d = np.asarray(self.delays)
@@ -130,6 +119,14 @@ class ServeStats:
             "exit_histogram": {
                 int(s): int((es == s).sum()) for s in np.unique(es)
             },
+            "num_batches": self.num_batches,
+        }
+
+    def by_rid(self) -> dict[int, tuple[int, int]]:
+        """rid -> (exit_stage, token); completion-order independent view."""
+        return {
+            r: (s, t)
+            for r, s, t in zip(self.rids, self.exit_stage, self.tokens)
         }
 
 
@@ -193,92 +190,153 @@ class CollaborativeEngine:
         return self.state.thresholds
 
     # -- data plane ---------------------------------------------------------
-    def _route(self, node: int) -> tuple[int, int]:
-        lo, hi = self.topo.edge_offsets[node], self.topo.edge_offsets[node + 1]
-        probs = self.p[lo:hi]
-        s = probs.sum()
-        e = (
-            lo + int(self.rng.choice(hi - lo, p=probs / s))
-            if s > 0
-            else int(self.rng.integers(lo, hi))
-        )
-        return int(self.topo.edge_dst[e]), e
+    def _stage_input(self, stage: int, reqs: list[Request], batch_size: int):
+        """Assemble the padded [B, S, d] residual stream for one batch.
+
+        Hidden states travel between replicas as host numpy buffers (the
+        in-process stand-in for the network hop), so batch assembly is one
+        concatenate + one upload instead of per-request device ops.
+        """
+        if stage == 1:
+            return self.programs.embed(batch_tokens(reqs, batch_size))
+        hs = [r.hidden for r in reqs]
+        B = padded_batch_size(len(reqs), batch_size)
+        if B > len(reqs):
+            hs.append(np.zeros((B - len(reqs),) + hs[0].shape[1:], hs[0].dtype))
+        # host buffer goes straight into the jitted stage (jit device_puts it)
+        return np.concatenate(hs, axis=0) if len(hs) > 1 else hs[0]
 
     def serve(
         self,
         prompts: list[np.ndarray],
         duration: float = 5.0,
         arrival_rate: float | None = None,
+        batch_size: int = 1,
     ) -> ServeStats:
-        """Serve ``prompts`` arriving as a Poisson stream over ``duration``.
+        """Serve ``prompts`` arriving as a Poisson stream.
 
-        Each request classifies its prompt's next token; exit thresholds are
-        the engine's current C.  Batch size 1 per hop keeps the routing
-        faithful (each request samples its own path); stage forwards are
-        jit-cached per shape so repeated shapes are fast.
+        Arrivals are a genuine Poisson process at ``arrival_rate`` (default:
+        the topology's total external rate ``phi_ext.sum()``); ``duration``
+        is only the fallback window when no positive rate exists.  Each
+        request classifies its prompt's next token; exit thresholds are the
+        engine's current C.  ``batch_size`` sets the per-replica micro-batch
+        width: each replica drains shape-bucketed padded batches, one jitted
+        stage forward and one fused exit decision per batch.  Routing stays
+        faithful — every request samples its own path.
         """
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
         topo, profile = self.topo, self.profile
+        programs = self.programs
         H = profile.num_stages
         eds = topo.nodes_at_stage(0)
-        rate = arrival_rate or float(topo.phi_ext.sum())
+        rate = (
+            float(arrival_rate)
+            if arrival_rate is not None
+            else float(topo.phi_ext.sum())
+        )
         n = len(prompts)
-        arrivals = np.sort(self.rng.uniform(0.0, duration, size=n))
+        if rate > 0 and np.isfinite(rate):
+            arrivals = np.cumsum(self.rng.exponential(1.0 / rate, size=n))
+        else:
+            arrivals = np.sort(self.rng.uniform(0.0, duration, size=n))
 
         stats = ServeStats([], [], [], [])
-        # event heap: (time, seq, request, node) — arrival of request at node
+        # p is fixed for the duration of the serve call: one precomputed CDF
+        # serves every routing sample (shared with the simulator)
+        route = RoutingCdf(topo, self.p)
+        # event heap: (time, seq, kind, payload)
+        #   kind 0: transfer done, request joins ``node``   payload (req, node)
+        #   kind 1: batch service done at ``node``          payload (node, reqs,
+        #           conf [B] | None, tok [B] | None)
         heap: list = []
         seq = itertools.count()
-        queues = {int(v): 0.0 for v in range(topo.num_nodes)}  # busy-until
+        pending = {
+            int(v): ShapeBucketBatcher(batch_size)
+            for v in range(topo.num_nodes)
+            if topo.node_stage[v] > 0
+        }
+        busy_until = {v: 0.0 for v in pending}
+
+        def dispatch(node: int, now: float) -> None:
+            """If ``node`` is free, drain one shape bucket and run it."""
+            if now < busy_until[node]:
+                return
+            popped = pending[node].pop_batch()
+            if popped is None:
+                return
+            _, reqs = popped
+            h = int(topo.node_stage[node])
+            x = programs.run_stage(h, self._stage_input(h, reqs, batch_size))
+            b = self.stage_to_branch.get(h)
+            conf = tok = None
+            if h == H:
+                conf, tok = programs.final_head(x)
+            elif b is not None:
+                conf, tok = programs.exit_head(h, x)
+            if h < H:
+                x_np = np.asarray(x)
+                for i, r in enumerate(reqs):
+                    r.hidden = x_np[i : i + 1]
+            if conf is not None:
+                conf = np.asarray(conf)[: len(reqs)]
+                tok = np.asarray(tok)[: len(reqs)]
+            stats.num_batches += 1
+            stats.num_forward_rows += int(x.shape[0])
+            service = len(reqs) * profile.alpha[h - 1] / float(topo.mu[node])
+            done = max(now, busy_until[node]) + service
+            busy_until[node] = done
+            heapq.heappush(heap, (done, next(seq), 1, (node, reqs, conf, tok)))
+
+        def enqueue(req: Request, node: int, now: float) -> None:
+            h = int(topo.node_stage[node])
+            key = (
+                ("tok", int(req.tokens.shape[0]))
+                if h == 1
+                else ("hid", tuple(req.hidden.shape[1:]))
+            )
+            req.node = node
+            req.stage = h
+            pending[node].push(key, req)
+            dispatch(node, now)
+
+        def finish(req: Request, node: int, done: float, c: float, t_: int, h: int):
+            req.exited, req.exit_stage = True, h
+            req.confidence, req.output_token = c, t_
+            req.t_done = done
+            stats.delays.append(req.delay)
+            stats.exit_stage.append(h)
+            stats.confidences.append(c)
+            stats.tokens.append(t_)
+            stats.rids.append(req.rid)
 
         for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
             ed = int(eds[i % len(eds)])
             req = Request(rid=i, tokens=np.asarray(prompt, np.int32), arrival=t)
-            nxt, e = self._route(ed)
+            nxt, e = route.sample(self.rng, ed)
             t_cm = profile.beta[0] / float(topo.edge_rate[e])
-            heapq.heappush(heap, (t + t_cm, next(seq), req, nxt))
+            heapq.heappush(heap, (t + t_cm, next(seq), 0, (req, nxt)))
 
         while heap:
-            now, _, req, node = heapq.heappop(heap)
-            h = int(topo.node_stage[node])
-            # ---- real compute: stage forward -------------------------------
-            if h == 1:
-                x = self.programs.embed(jnp.asarray(req.tokens[None, :]))
-            else:
-                x = req.hidden
-            x = self.programs.run_stage(h, x)
-            req.hidden = x
-
-            # ---- service delay: M/D/1 FIFO approximation -------------------
-            service = profile.alpha[h - 1] / float(topo.mu[node])
-            start = max(now, queues[node])
-            done = start + service
-            queues[node] = done
-
-            # ---- exit decision with REAL confidence ------------------------
-            b = self.stage_to_branch.get(h)
-            exits = False
-            if b is not None:
-                conf, tok = self.programs.exit_head(h, x[:, -1:])
-                c, t_ = float(conf[0]), int(tok[0])
-                if c >= self.thresholds[b]:
-                    exits = True
-            if h == H:
-                conf, tok = self.programs.final_head(x[:, -1:])
-                c, t_ = float(conf[0]), int(tok[0])
-                exits = True
-            if exits:
-                req.exited, req.exit_stage = True, h
-                req.confidence, req.output_token = c, t_
-                req.t_done = done
-                stats.delays.append(req.delay)
-                stats.exit_stage.append(h)
-                stats.confidences.append(c)
-                stats.tokens.append(t_)
+            now, _, kind, payload = heapq.heappop(heap)
+            if kind == 0:
+                req, node = payload
+                enqueue(req, node, now)
                 continue
-
-            # ---- offload onward -------------------------------------------
-            nxt, e = self._route(node)
-            t_cm = profile.beta[h] / float(topo.edge_rate[e])
-            heapq.heappush(heap, (done + t_cm, next(seq), req, nxt))
+            # kind 1: batch done — batched exit decision already on device
+            node, reqs, conf, tok = payload
+            h = int(topo.node_stage[node])
+            b = self.stage_to_branch.get(h)
+            for i, req in enumerate(reqs):
+                if h == H:
+                    finish(req, node, now, float(conf[i]), int(tok[i]), h)
+                    continue
+                if b is not None and float(conf[i]) >= self.thresholds[b]:
+                    finish(req, node, now, float(conf[i]), int(tok[i]), h)
+                    continue
+                nxt, e = route.sample(self.rng, node)
+                t_cm = profile.beta[h] / float(topo.edge_rate[e])
+                heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, nxt)))
+            dispatch(node, now)
 
         return stats

@@ -1,8 +1,11 @@
-"""jit-able serve steps: prefill / decode with fused early-exit selection.
+"""jit-able serve steps: staged forwards, fused exit heads, prefill / decode.
 
-These are the functions the multi-pod dry-run lowers for the inference
-shapes: static shapes, cache-in/cache-out, thresholds as a traced vector so
-one compiled program serves every threshold setting DTO-EE picks.
+These are the functions the serving engine and the multi-pod dry-run lower
+for the inference shapes: static shapes, cache-in/cache-out, thresholds as a
+traced vector so one compiled program serves every threshold setting DTO-EE
+picks.  The per-stage builders below are what the micro-batched data plane
+runs once per padded batch (jax re-traces per shape, so each builder yields
+one compiled program per batch bucket).
 """
 from __future__ import annotations
 
@@ -13,6 +16,58 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
+
+
+# ---------------------------------------------------------------------------
+# Per-stage programs for the micro-batched engine
+# ---------------------------------------------------------------------------
+
+
+def make_embed_step(cfg: ArchConfig):
+    """tokens [B, S] -> embedded residual stream [B, S, d]."""
+
+    @jax.jit
+    def embed_step(params: Any, tokens: jnp.ndarray) -> jnp.ndarray:
+        return model_lib._embed_inputs(params, {"tokens": tokens}, cfg)
+
+    return embed_step
+
+
+def make_stage_forward(cfg: ArchConfig, stage_idx: int):
+    """Residual stream through stage ``stage_idx`` (1-indexed), any batch."""
+
+    @jax.jit
+    def stage_forward(params: Any, x: jnp.ndarray) -> jnp.ndarray:
+        stage = params["stages"][stage_idx - 1]
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        out, _, _ = model_lib._run_stage(stage, x, cfg, positions, "train")
+        return out
+
+    return stage_forward
+
+
+def make_exit_head_step(cfg: ArchConfig, stage_idx: int):
+    """Fused (confidence, token) of exit branch b_h on x [B, S, d].
+
+    The last-token slice happens inside the jitted program so the engine
+    pays one device call per batch, not one per slice.
+    """
+
+    @jax.jit
+    def exit_head_step(params: Any, x: jnp.ndarray):
+        return model_lib.exit_confidence(params, x[:, -1:], stage_idx, cfg)
+
+    return exit_head_step
+
+
+def make_final_head_step(cfg: ArchConfig):
+    """Fused (confidence, token) of the final head on x [B, S, d]."""
+
+    @jax.jit
+    def final_head_step(params: Any, x: jnp.ndarray):
+        return model_lib.final_confidence(params, x[:, -1:], cfg)
+
+    return final_head_step
 
 
 def select_exit(

@@ -2,6 +2,7 @@
 agreement with the analytic M/D/1-PS formulas."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -2,6 +2,7 @@
 baselines, threshold coupling (Eqs. 17-18)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 import jax

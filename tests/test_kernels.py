@@ -117,6 +117,10 @@ def test_decode_attention_length_zero_rows_are_finite(rng):
         (4, 64, 1000, 4, 256),  # ragged vocab
         (8, 128, 2048, 4, 512),
         (3, 32, 513, 8, 128),  # B < block, V % block != 0
+        (1, 16, 257, 8, 128),  # single row, ragged vocab tail of 1
+        (5, 16, 130, 4, 64),  # batch pad + vocab pad simultaneously
+        (7, 32, 64, 2, 64),  # vocab fits one block exactly, batch ragged
+        (6, 16, 127, 8, 128),  # vocab < one block (block_v clamps to V)
     ],
 )
 def test_exit_confidence_matches_ref(rng, dtype, B, d, V, bb, bv):
@@ -126,6 +130,17 @@ def test_exit_confidence_matches_ref(rng, dtype, B, d, V, bb, bv):
     cref, iref = ref.exit_confidence_ref(h, w)
     np.testing.assert_allclose(np.asarray(conf), np.asarray(cref), atol=1e-3)
     assert bool(jnp.all(idx == iref))
+
+
+def test_exit_confidence_padding_rows_do_not_leak(rng):
+    """Padded batch rows must not perturb real rows' (conf, argmax)."""
+    h = _rand(rng, (3, 32), jnp.float32)
+    w = _rand(rng, (32, 200), jnp.float32)
+    conf3, idx3 = exit_confidence(h, w, block_b=8, block_v=64, interpret=True)
+    h_pad = jnp.concatenate([h, jnp.zeros((5, 32), jnp.float32)])
+    conf8, idx8 = exit_confidence(h_pad, w, block_b=8, block_v=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(conf8[:3]), np.asarray(conf3), atol=1e-6)
+    assert bool(jnp.all(idx8[:3] == idx3))
 
 
 def test_exit_confidence_is_valid_probability(rng):
@@ -141,10 +156,12 @@ def test_ops_dispatch_xla_matches_interpret(rng):
 
     h = _rand(rng, (4, 64), jnp.bfloat16)
     w = _rand(rng, (64, 500), jnp.bfloat16)
-    ops.set_backend("xla")
-    c_x, i_x = ops.exit_confidence(h, w)
-    ops.set_backend("pallas_interpret")
-    c_p, i_p = ops.exit_confidence(h, w)
-    ops.set_backend("auto")
+    try:
+        ops.set_backend("xla")
+        c_x, i_x = ops.exit_confidence(h, w)
+        ops.set_backend("pallas_interpret")
+        c_p, i_p = ops.exit_confidence(h, w)
+    finally:
+        ops.set_backend("auto")
     np.testing.assert_allclose(np.asarray(c_x), np.asarray(c_p), atol=1e-3)
     assert bool(jnp.all(i_x == i_p))

@@ -20,6 +20,17 @@ def mesh11():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across the jax signature change (positional axis_sizes +
+    axis_names vs. a single tuple of (name, size) pairs)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def test_constrain_is_noop_without_mesh():
     sharding.clear_mesh()
     x = jnp.ones((4, 4))
@@ -55,10 +66,9 @@ def test_cache_specs_shard_seq_on_model_axis():
 
 
 def test_divisibility_fallback():
-    from jax.sharding import AbstractMesh
     from repro.sharding.specs import MeshRules, _spec_for
 
-    mesh = AbstractMesh((4, 2), ("data", "model"))
+    mesh = _abstract_mesh((4, 2), ("data", "model"))
     rules = MeshRules.standard(mesh)
     # dim 7 not divisible by 4 / dim 3 not divisible by 2 -> replicated
     assert _spec_for((7, 3), ("batch", "seq"), rules) == P(None, None)
@@ -125,10 +135,9 @@ def test_model_flops_modes():
 
 
 def test_pure_dp_policy_maps_all_axes_to_batch():
-    from jax.sharding import AbstractMesh
     from repro.sharding.specs import MeshRules
 
-    mesh = AbstractMesh((2, 4, 4), ("pod", "data", "model"))
+    mesh = _abstract_mesh((2, 4, 4), ("pod", "data", "model"))
     rules = MeshRules.pure_dp(mesh)
     assert rules.batch_axes == ("pod", "data", "model")
     assert rules.tp_axis is None
@@ -138,12 +147,9 @@ def test_pure_dp_policy_maps_all_axes_to_batch():
 def test_cache_feature_sharding_avoids_seq_dim(monkeypatch):
     """Default KV policy shards the feature dim (local per-token writes);
     REPRO_CACHE_SHARD=seq restores the sequence layout."""
-    import os
-
-    from jax.sharding import AbstractMesh
     from repro.sharding import specs as S
 
-    mesh = AbstractMesh((4, 4), ("data", "model"))
+    mesh = _abstract_mesh((4, 4), ("data", "model"))
     rules = S.MeshRules.standard(mesh)
     cache = {
         "k": jax.ShapeDtypeStruct((2, 8, 64, 8, 128), jnp.bfloat16),

@@ -1,6 +1,7 @@
 """Accuracy-ratio table (reuse-based one-shot evaluation): invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.thresholds import synthetic_validation
