@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench lint
+.PHONY: test bench bench-decode bench-smoke lint
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -10,6 +10,15 @@ test:
 # serving throughput + vectorized simulator; writes BENCH_serving.json
 bench:
 	$(PYTHON) benchmarks/serving_throughput.py
+
+# cached decode vs stateless re-prefill; writes BENCH_decode.json
+bench-decode:
+	$(PYTHON) benchmarks/decode_throughput.py
+
+# CI-sized decode bench: tiny workload, asserts the cached/stateless/
+# monolithic outputs agree and the BENCH_decode.json schema holds
+bench-smoke:
+	$(PYTHON) benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_smoke.json
 
 # syntax check of every tree (no third-party linter baked into the image;
 # swap in ruff/pyflakes here once available)

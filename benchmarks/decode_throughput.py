@@ -1,0 +1,230 @@
+"""Decode throughput: cache-threaded decode vs stateless re-prefill.
+
+Runs ``CollaborativeEngine.serve`` at gen_len in {8, 32} in both decode
+modes on one fixed workload (same prompts, same arrival process, same
+thresholds), asserts token-identical sequences and exit decisions between
+the modes AND against the monolithic ``model.prefill`` + ``model.decode_step``
+reference, and measures wall-clock decode tokens/s.  The cached mode does
+O(1) work per token per stage; the stateless baseline recomputes the full
+prefix at every stage on every step — the waste this PR removes.  Results
+land in ``BENCH_decode.json``.
+
+    PYTHONPATH=src python benchmarks/decode_throughput.py [--out BENCH_decode.json]
+    PYTHONPATH=src python benchmarks/decode_throughput.py --smoke   # CI schema check
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.core.profiles import profile_from_arch
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import NetworkSpec, build_edge_network
+from repro.core.types import DtoHyperParams
+from repro.models import model as model_lib
+from repro.serving import CollaborativeEngine, monolithic_generate
+
+
+def build_engine(seed: int = 0, threshold: float | None = 0.1) -> CollaborativeEngine:
+    """A small-but-real staged model: per-dispatch overhead vs per-row compute
+    at a ratio representative of a serving host driving an accelerator."""
+    cfg = get_config("stablelm-1.6b").reduced(
+        vocab_size=128,
+        d_model=64,
+        d_ff=128,
+        num_heads=2,
+        num_kv_heads=2,
+        head_dim=32,
+    )
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    profile = profile_from_arch(cfg)
+    topo = build_edge_network(
+        seed=seed, profile=profile, spec=NetworkSpec(num_eds=4, es_per_stage=(2, 2))
+    )
+    ep = synthetic_validation(seed=1, profile=profile)
+    eng = CollaborativeEngine(
+        params, cfg, topo, profile, ep, DtoHyperParams(rounds=20), seed=seed
+    )
+    eng.configuration_phase()
+    if threshold is not None:
+        # a mid-range threshold so the workload mixes early exits (rows
+        # retiring mid-batch) with full-length generations
+        eng.state.thresholds = np.full_like(eng.state.thresholds, threshold)
+    return eng
+
+
+def bench_decode(
+    eng: CollaborativeEngine,
+    gen_lens: tuple[int, ...],
+    n_requests: int,
+    prompt_len: int,
+    batch_size: int,
+    arrival_rate: float,
+    serve_seed: int = 123,
+    repeats: int = 2,
+    num_slots: int | None = None,
+) -> dict:
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, eng.cfg.vocab_size, size=prompt_len).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    by_gen: dict[str, dict] = {}
+    for gen_len in gen_lens:
+        # monolithic single-host reference: the ground truth both engine
+        # modes must reproduce token-for-token
+        reference = {}
+        for i, p in enumerate(prompts):
+            toks, stage = monolithic_generate(
+                eng.programs.params, eng.cfg, p, eng.thresholds, gen_len
+            )
+            reference[i] = (stage, tuple(toks))
+        modes: dict[str, dict] = {}
+        seqs: dict[str, dict] = {}
+        for mode in ("stateless", "cached"):
+            eng.rng = np.random.default_rng(serve_seed)
+            eng.serve(
+                prompts,
+                arrival_rate=arrival_rate,
+                batch_size=batch_size,
+                gen_len=gen_len,
+                decode_mode=mode,
+                num_slots=num_slots,
+            )  # warmup/compile
+            walls = []
+            for _ in range(repeats):
+                eng.rng = np.random.default_rng(serve_seed)
+                t0 = time.perf_counter()
+                stats = eng.serve(
+                    prompts,
+                    arrival_rate=arrival_rate,
+                    batch_size=batch_size,
+                    gen_len=gen_len,
+                    decode_mode=mode,
+                    num_slots=num_slots,
+                )
+                walls.append(time.perf_counter() - t0)
+            wall = float(np.median(walls))
+            s = stats.summary()
+            seqs[mode] = stats.sequences_by_rid()
+            modes[mode] = {
+                "wall_s": wall,
+                "tokens_per_s": s["generated_tokens"] / wall,
+                "generated_tokens": s["generated_tokens"],
+                "num_completed": s["num_completed"],
+                "mean_delay_s": s["mean_delay"],
+                "p95_delay_s": s["p95_delay"],
+                "num_batches": s["num_batches"],
+                "padded_row_frac": s["padded_row_frac"],
+                "exit_histogram": s["exit_histogram"],
+            }
+            print(
+                f"gen_len {gen_len:3d} {mode:9s}: "
+                f"{modes[mode]['tokens_per_s']:8.1f} tok/s  wall {wall:.3f}s  "
+                f"batches {s['num_batches']:5d}  exits {s['exit_histogram']}"
+            )
+        identical = (
+            seqs["cached"] == seqs["stateless"] == reference
+        )
+        speedup = modes["cached"]["tokens_per_s"] / modes["stateless"]["tokens_per_s"]
+        print(
+            f"gen_len {gen_len:3d}: token-identical (cached == stateless == "
+            f"monolithic): {identical}  speedup {speedup:.2f}x"
+        )
+        by_gen[str(gen_len)] = {
+            "by_mode": modes,
+            "tokens_identical": identical,
+            "speedup_cached_vs_stateless": speedup,
+        }
+    return {
+        "workload": {
+            "n_requests": n_requests,
+            "prompt_len": prompt_len,
+            "batch_size": batch_size,
+            "num_slots": num_slots,
+            "arrival_rate": arrival_rate,
+            "threshold": float(eng.thresholds[0]),
+        },
+        "by_gen_len": by_gen,
+    }
+
+
+def validate_schema(payload: dict) -> None:
+    """The contract ``bench-smoke`` (CI) holds this benchmark to."""
+    assert "decode" in payload and "meta" in payload
+    dec = payload["decode"]
+    for key in ("workload", "by_gen_len"):
+        assert key in dec, f"missing {key}"
+    for gen_len, entry in dec["by_gen_len"].items():
+        assert entry["tokens_identical"] is True, (
+            f"gen_len {gen_len}: cached decode diverged from the stateless "
+            "baseline / monolithic reference"
+        )
+        assert entry["speedup_cached_vs_stateless"] > 0
+        for mode in ("cached", "stateless"):
+            m = entry["by_mode"][mode]
+            for field in ("wall_s", "tokens_per_s", "generated_tokens", "num_batches"):
+                assert np.isfinite(m[field]), f"{mode}.{field} not finite"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_decode.json")
+    # decode-dominated workload: long prompts make the stateless baseline's
+    # O(prefix) re-compute per token visible against per-dispatch overhead
+    ap.add_argument("--n-requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=384)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--gen-lens", type=int, nargs="+", default=[8, 32])
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument(
+        "--arrival-rate",
+        type=float,
+        default=1e6,
+        help="Poisson arrival rate; high = closed-loop (all requests queued)",
+    )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny workload; validate the JSON schema and exit nonzero on drift",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_requests, args.prompt_len, args.gen_lens = 6, 8, [4]
+        args.batch_size, args.num_slots, args.repeats = 4, 4, 1
+
+    eng = build_engine(threshold=0.35)
+    res = bench_decode(
+        eng,
+        tuple(args.gen_lens),
+        args.n_requests,
+        args.prompt_len,
+        args.batch_size,
+        args.arrival_rate,
+        repeats=args.repeats,
+        num_slots=args.num_slots,
+    )
+    payload = {
+        "decode": res,
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+        },
+    }
+    validate_schema(payload)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

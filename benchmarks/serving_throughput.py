@@ -89,13 +89,18 @@ def bench_engine(
             "mean_delay_s": s["mean_delay"],
             "p95_delay_s": s["p95_delay"],
             "num_batches": s["num_batches"],
-            "num_forward_rows": stats.num_forward_rows,
+            "num_forward_rows": s["num_forward_rows"],
+            "num_real_rows": s["num_real_rows"],
+            "padded_row_frac": s["padded_row_frac"],
+            "sim_tokens_per_s": s["sim_tokens_per_s"],
         }
         print(
             f"batch {bs:3d}: {per_bs[str(bs)]['tokens_per_s']:8.1f} tok/s  "
             f"wall {wall:.3f}s  batches {s['num_batches']:4d}  "
             f"mean delay {s['mean_delay'] * 1e3:7.1f} ms  "
-            f"p95 {s['p95_delay'] * 1e3:7.1f} ms"
+            f"p95 {s['p95_delay'] * 1e3:7.1f} ms  "
+            f"padded waste {s['padded_row_frac'] * 100:4.1f}% "
+            f"({s['num_forward_rows'] - s['num_real_rows']}/{s['num_forward_rows']} rows)"
         )
     b0 = min(batch_sizes)
     identical = all(exits[bs] == exits[b0] for bs in batch_sizes)

@@ -44,7 +44,11 @@ def decode_attention_ref(
     kvh = k.shape[2]
     G = Hq // kvh
     qg = q.reshape(B, kvh, G, hd)
-    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    # * (1/sqrt) rather than /sqrt: bitwise-identical to the Pallas kernel's
+    # ``s * sm_scale`` and to the q-chunked prefill path (_attend_block)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) * float(
+        1.0 / np.sqrt(hd)
+    )
     valid = jnp.arange(k.shape[1])[None, :] < lengths[:, None]  # [B, S]
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)

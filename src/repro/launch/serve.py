@@ -35,6 +35,25 @@ def main() -> None:
         default=8,
         help="per-replica micro-batch width for the data plane",
     )
+    ap.add_argument(
+        "--gen-len",
+        type=int,
+        default=1,
+        help="tokens decoded per request (1 = single-shot classification)",
+    )
+    ap.add_argument(
+        "--decode-mode",
+        choices=("cached", "stateless"),
+        default=None,
+        help="cached = slot-resident KV caches + continuous batching; "
+        "stateless = re-prefill baseline (default: cached iff gen-len > 1)",
+    )
+    ap.add_argument(
+        "--num-slots",
+        type=int,
+        default=None,
+        help="cache slots per replica ring (default: 2 * batch size)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -64,12 +83,17 @@ def main() -> None:
             duration=args.slot_seconds,
             arrival_rate=rcfg.arrival_rate,
             batch_size=args.batch_size,
+            gen_len=args.gen_len,
+            decode_mode=args.decode_mode,
+            num_slots=args.num_slots,
         )
         s = stats.summary()
         print(
             f"slot {slot}: {s['num_completed']} done  "
+            f"{s['generated_tokens']} tokens  "
             f"mean_delay {s['mean_delay']*1e3:.1f}ms  "
             f"p95 {s['p95_delay']*1e3:.1f}ms  "
+            f"padded waste {s['padded_row_frac']*100:.1f}%  "
             f"exits {s['exit_histogram']}  thresholds {engine.thresholds}",
             flush=True,
         )

@@ -221,6 +221,60 @@ def _cache_write(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.n
     return jnp.where(mask, jnp.broadcast_to(new, buf.shape), buf)
 
 
+def _cache_write_ragged(buf: jnp.ndarray, new: jnp.ndarray, slots: jnp.ndarray) -> jnp.ndarray:
+    """Write one token per row at PER-ROW slots (traced int32 [B]).
+
+    Same masked-select lowering as ``_cache_write`` (local under sharding of
+    the seq dim), with the slot index varying across the batch — the ragged
+    case of the serving engine, where every cache row sits at its own
+    position.
+    """
+    new = new.astype(buf.dtype)
+    S = buf.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, S) + (1,) * (buf.ndim - 2), 1)
+    mask = iota == slots.reshape((-1,) + (1,) * (buf.ndim - 1))
+    return jnp.where(mask, jnp.broadcast_to(new, buf.shape), buf)
+
+
+def gqa_decode_ragged(
+    params: Params,
+    x: jnp.ndarray,  # [B, 1, d]
+    cache: Params,
+    dims: AttnDims,
+):
+    """One decode step with PER-ROW cache positions (``cache["pos"]``: [B]).
+
+    This is the serving engine's slot-cache path: rows of one batch belong to
+    different requests whose prefixes have different lengths (ragged
+    continuous batching), so rope positions, the cache write, and the
+    validity mask are all per-row.  Attention runs through
+    ``kernels.ops.decode_attention`` — the Pallas flash-decode kernel on TPU,
+    its jnp oracle elsewhere — which takes exactly this per-row ``lengths``
+    contract.  Full (non-windowed) caches only.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    B = x.shape[0]
+    pos = cache["pos"]  # int32 [B]
+    q, k_new, v_new = _project_qkv(params, x, dims)
+    pos_b = pos[:, None]  # [B, 1]
+    q = apply_rope(q, pos_b, dims.rope_theta)
+    k_new = apply_rope(k_new, pos_b, dims.rope_theta)
+
+    if "slot_pos" in cache:
+        raise NotImplementedError("ragged decode supports full caches only")
+    new_cache = dict(cache)
+    new_cache["k"] = _cache_write_ragged(cache["k"], k_new, pos)
+    new_cache["v"] = _cache_write_ragged(cache["v"], v_new, pos)
+    new_cache["pos"] = pos + 1
+
+    out = kernel_ops.decode_attention(
+        q[:, 0], new_cache["k"], new_cache["v"], pos + 1
+    )
+    out = matmul(out.reshape(B, 1, dims.q_dim), params["w_o"])
+    return out, new_cache
+
+
 def gqa_decode(
     params: Params,
     x: jnp.ndarray,  # [B, 1, d]
@@ -373,42 +427,84 @@ def mla_prefill_into_cache(cache: Params, c_kv: jnp.ndarray, k_pe: jnp.ndarray) 
     return cache
 
 
-def mla_decode(params: Params, x: jnp.ndarray, cache: Params, dims: MlaDims):
-    """Absorbed MLA decode: score and mix *in latent space* — the per-step
-    cost is O(S * (lora + rope_dim)) per head instead of O(S * head_dim * 2)
-    with re-expanded keys/values.  This is the inference win MLA exists for.
+def _mla_absorbed_attend(
+    params: Params,
+    q_nope: jnp.ndarray,  # [B, 1, H, nope_dim]
+    q_pe: jnp.ndarray,  # [B, 1, H, rope_dim]
+    c_kv: jnp.ndarray,  # [B, S, lora]
+    k_pe: jnp.ndarray,  # [B, S, rope_dim]
+    pos: jnp.ndarray,  # int32 [B] — per-row position of the new token
+    dims: MlaDims,
+) -> jnp.ndarray:
+    """Absorbed-latent attention shared by the scalar- and ragged-position
+    decodes: score and mix *in latent space* — the per-step cost is
+    O(S * (lora + rope_dim)) per head instead of O(S * head_dim * 2) with
+    re-expanded keys/values.  This is the inference win MLA exists for.
     """
-    B = x.shape[0]
+    B, S_cache = c_kv.shape[0], c_kv.shape[1]
     H = dims.num_heads
-    pos = cache["pos"]
-    pos_b = jnp.full((B, 1), pos, jnp.int32)
-
-    q_nope, q_pe = _mla_q(params, x, dims, pos_b)  # [B,1,H,*]
-    c_new, kpe_new = _mla_latent(params, x, dims, pos_b)
-
-    S_cache = cache["c_kv"].shape[1]
-    new_cache = dict(cache)
-    new_cache["c_kv"] = _cache_write(cache["c_kv"], c_new, pos)
-    new_cache["k_pe"] = _cache_write(cache["k_pe"], kpe_new, pos)
-    new_cache["pos"] = pos + 1
-
     # absorb W_uk into the query:  q_lat[b,h,r] = sum_d q_nope[b,h,d] W_uk[r,(h,d)]
     w_uk = params["w_uk"].reshape(dims.kv_lora_rank, H, dims.qk_nope_head_dim)
     q_lat = jnp.einsum(
         "bhd,rhd->bhr", q_nope[:, 0].astype(jnp.bfloat16), w_uk.astype(jnp.bfloat16)
     )
-    c_kv = new_cache["c_kv"]  # [B,S,lora]
-    k_pe = new_cache["k_pe"]  # [B,S,rope]
     scores = jnp.einsum("bhr,bsr->bhs", q_lat, c_kv).astype(jnp.float32)
     scores = scores + jnp.einsum(
         "bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32), k_pe.astype(jnp.float32)
     )
     scores = scores / np.sqrt(dims.qk_head_dim)
-    valid = jnp.arange(S_cache) <= pos
-    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    valid = jnp.arange(S_cache)[None, :] <= pos[:, None]  # [B, S]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
     out_lat = jnp.einsum("bhs,bsr->bhr", probs, c_kv)  # [B,H,lora]
     w_uv = params["w_uv"].reshape(dims.kv_lora_rank, H, dims.v_head_dim)
     out = jnp.einsum("bhr,rhd->bhd", out_lat, w_uv.astype(out_lat.dtype))
-    out = matmul(out.reshape(B, 1, H * dims.v_head_dim), params["w_o"])
+    return matmul(out.reshape(B, 1, H * dims.v_head_dim), params["w_o"])
+
+
+def mla_decode_ragged(params: Params, x: jnp.ndarray, cache: Params, dims: MlaDims):
+    """Absorbed MLA decode with PER-ROW cache positions (``cache["pos"]``: [B]).
+
+    The serving engine's ragged slot-cache path: same latent-space math as
+    ``mla_decode`` applied row-wise with per-row rope positions, cache
+    writes, and validity masks.
+    """
+    pos = cache["pos"]  # int32 [B]
+    pos_b = pos[:, None]
+    q_nope, q_pe = _mla_q(params, x, dims, pos_b)  # [B,1,H,*]
+    c_new, kpe_new = _mla_latent(params, x, dims, pos_b)
+
+    new_cache = dict(cache)
+    new_cache["c_kv"] = _cache_write_ragged(cache["c_kv"], c_new, pos)
+    new_cache["k_pe"] = _cache_write_ragged(cache["k_pe"], kpe_new, pos)
+    new_cache["pos"] = pos + 1
+
+    out = _mla_absorbed_attend(
+        params, q_nope, q_pe, new_cache["c_kv"], new_cache["k_pe"], pos, dims
+    )
+    return out, new_cache
+
+
+def mla_decode(params: Params, x: jnp.ndarray, cache: Params, dims: MlaDims):
+    """Absorbed MLA decode against a shared-position cache (scalar ``pos``)."""
+    B = x.shape[0]
+    pos = cache["pos"]
+    pos_b = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_pe = _mla_q(params, x, dims, pos_b)  # [B,1,H,*]
+    c_new, kpe_new = _mla_latent(params, x, dims, pos_b)
+
+    new_cache = dict(cache)
+    new_cache["c_kv"] = _cache_write(cache["c_kv"], c_new, pos)
+    new_cache["k_pe"] = _cache_write(cache["k_pe"], kpe_new, pos)
+    new_cache["pos"] = pos + 1
+
+    out = _mla_absorbed_attend(
+        params,
+        q_nope,
+        q_pe,
+        new_cache["c_kv"],
+        new_cache["k_pe"],
+        jnp.full((B,), pos, jnp.int32),
+        dims,
+    )
     return out, new_cache

@@ -267,13 +267,26 @@ def _block_apply(
     raise ValueError(kind)
 
 
-def _block_decode(kind: str, p: Params, x: jnp.ndarray, cache: Params, cfg: ArchConfig):
+def _block_decode(
+    kind: str,
+    p: Params,
+    x: jnp.ndarray,
+    cache: Params,
+    cfg: ArchConfig,
+    ragged: bool = False,
+):
+    """One-token block step.  ``ragged=True`` treats ``cache["pos"]`` as a
+    per-row int32 [B] vector (the serving engine's slot-cache batches mix
+    requests at different prefix lengths); SSM state steps are position-free,
+    so only the attention variants branch."""
     if kind in ("attn", "dense_attn", "moe_attn"):
         h = layers.apply_norm(cfg.norm, p["norm1"], x)
         if cfg.mla is not None:
-            out, cache = attention.mla_decode(p["attn"], h, cache, cfg.mla)
+            mla_fn = attention.mla_decode_ragged if ragged else attention.mla_decode
+            out, cache = mla_fn(p["attn"], h, cache, cfg.mla)
         else:
-            out, cache = attention.gqa_decode(p["attn"], h, cache, cfg.attn_dims())
+            gqa_fn = attention.gqa_decode_ragged if ragged else attention.gqa_decode
+            out, cache = gqa_fn(p["attn"], h, cache, cfg.attn_dims())
         x = x + out
         h2 = layers.apply_norm(cfg.norm, p["norm2"], x)
         if kind == "moe_attn":
@@ -336,19 +349,79 @@ def _run_stage(
     return x, stage_caches, aux
 
 
-def _decode_stage(stage: Params, x: jnp.ndarray, caches, cfg: ArchConfig):
+def _decode_stage(
+    stage: Params, x: jnp.ndarray, caches, cfg: ArchConfig, ragged: bool = False
+):
     period = cfg.period
 
     def body(x, inp):
         per_params, per_cache = inp
         new_caches = []
         for i, kind in enumerate(period):
-            x, nc = _block_decode(kind, per_params[i], x, per_cache[i], cfg)
+            x, nc = _block_decode(kind, per_params[i], x, per_cache[i], cfg, ragged)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
     x, new_caches = layers.loop_scan(body, x, (stage["blocks"], caches))
     return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Per-stage entry points (the collaborative serving data plane)
+# ---------------------------------------------------------------------------
+#
+# ``prefill`` / ``decode_step`` below run all H stages monolithically; the
+# serving engine instead hands the residual stream replica-to-replica, so it
+# needs the SAME math split at stage granularity: one prefill that builds one
+# stage's caches, one cached decode step against them, and a slot-resident
+# cache layout whose batch rows belong to different requests.
+
+
+def prefill_stage(
+    params: Params, stage_idx: int, x: jnp.ndarray, cfg: ArchConfig, max_len: int
+):
+    """Prefill through stage ``stage_idx`` (1-indexed): residual stream in,
+    (residual stream out, stage caches sized ``max_len``) back."""
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    out, caches, _ = _run_stage(
+        params["stages"][stage_idx - 1], x, cfg, positions, "prefill", max_len
+    )
+    return out, caches
+
+
+def decode_stage_ragged(
+    params: Params, stage_idx: int, x: jnp.ndarray, caches, cfg: ArchConfig
+):
+    """One token through stage ``stage_idx`` against its caches, with
+    per-row positions (``cache["pos"]``: int32 [B])."""
+    return _decode_stage(params["stages"][stage_idx - 1], x, caches, cfg, ragged=True)
+
+
+def init_stage_slot_caches(cfg: ArchConfig, stage_idx: int, num_slots: int, max_len: int):
+    """Zeroed slot-resident caches for one stage's replica.
+
+    Leaves are shaped ``[n_periods, num_slots, ...]`` with ``pos`` a per-slot
+    int32 vector — each slot holds one request's stage-local cache row, so a
+    decode batch can gather any subset of slots (continuous batching).
+    Sliding-window ring caches are not representable per-slot yet.
+    """
+    if cfg.uses_attention and cfg.mla is None:
+        dims = cfg.attn_dims()
+        if dims.sliding_window is not None and dims.sliding_window < max_len:
+            raise NotImplementedError(
+                "slot caches need full attention caches; sliding window "
+                f"{dims.sliding_window} < max_len {max_len}"
+            )
+    n_periods = cfg.stage_periods()[stage_idx - 1]
+    per_stage = []
+    for kind in cfg.period:
+        one = _block_cache(kind, cfg, num_slots, max_len)
+        one["pos"] = jnp.zeros((num_slots,), jnp.int32)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(), one
+        )
+        per_stage.append(stacked)
+    return tuple(per_stage)
 
 
 # ---------------------------------------------------------------------------
@@ -486,9 +559,9 @@ def prefill(params: Params, batch: dict, cfg: ArchConfig, max_len: int):
             c, t = exit_confidence(params, x[:, -1:], si, cfg)
             confs.append(c)
             toks.append(t)
-    h = layers.apply_norm(cfg.norm, params["final_norm"], x[:, -1:])
-    logits = lm_logits(params, h, cfg)[:, 0]
-    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # final head through the same fused path as the exit branches: f32-
+    # accumulated logits that never materialize [B, vocab]
+    _, next_token = final_confidence(params, x[:, -1:], cfg)
     exit_conf = jnp.stack(confs, axis=1) if confs else jnp.zeros((B, 0), jnp.float32)
     exit_tok = jnp.stack(toks, axis=1) if toks else jnp.zeros((B, 0), jnp.int32)
     return next_token, exit_conf, exit_tok, caches
@@ -507,9 +580,7 @@ def decode_step(params: Params, batch: dict, caches: list, cfg: ArchConfig):
             c, t = exit_confidence(params, x, si, cfg)
             confs.append(c)
             toks.append(t)
-    h = layers.apply_norm(cfg.norm, params["final_norm"], x)
-    logits = lm_logits(params, h, cfg)[:, 0]
-    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    _, next_token = final_confidence(params, x, cfg)
     exit_conf = jnp.stack(confs, axis=1) if confs else jnp.zeros((B, 0), jnp.float32)
     exit_tok = jnp.stack(toks, axis=1) if toks else jnp.zeros((B, 0), jnp.int32)
     return next_token, exit_conf, exit_tok, new_caches

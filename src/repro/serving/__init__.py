@@ -2,6 +2,7 @@ from repro.serving.batching import (
     FifoBatcher,
     Request,
     ShapeBucketBatcher,
+    SlotRing,
     batch_tokens,
     pad_tokens,
     padded_batch_size,
@@ -13,15 +14,20 @@ from repro.serving.steps import (
     make_exit_head_step,
     make_final_head_step,
     make_prefill_step,
+    make_slot_write,
+    make_stage_decode,
     make_stage_forward,
+    make_stage_prefill,
+    monolithic_generate,
     select_exit,
 )
 
 __all__ = [
-    "FifoBatcher", "Request", "ShapeBucketBatcher", "batch_tokens",
+    "FifoBatcher", "Request", "ShapeBucketBatcher", "SlotRing", "batch_tokens",
     "pad_tokens", "padded_batch_size",
     "CollaborativeEngine", "ServeStats", "StagePrograms",
     "make_decode_step", "make_embed_step", "make_exit_head_step",
-    "make_final_head_step", "make_prefill_step", "make_stage_forward",
-    "select_exit",
+    "make_final_head_step", "make_prefill_step", "make_slot_write",
+    "make_stage_decode", "make_stage_forward", "make_stage_prefill",
+    "monolithic_generate", "select_exit",
 ]

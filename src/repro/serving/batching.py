@@ -35,10 +35,32 @@ class Request:
     output_token: int = -1
     confidence: float = 0.0
     t_done: float = 0.0
+    # autoregressive decode state
+    phase: str = "prefill"  # "prefill" (first pass) | "decode" (cached steps)
+    generated: list = dataclasses.field(default_factory=list)  # emitted tokens
+    # per-stage route affinity: stage -> (node, edge); sampled on the first
+    # pass and reused every decode step, so a request's stage-local KV cache
+    # stays resident at the replica that built it
+    path: dict = dataclasses.field(default_factory=dict)
+    # stage-local cache residency: node -> slot index in that replica's ring
+    slots: dict = dataclasses.field(default_factory=dict)
 
     @property
     def delay(self) -> float:
         return self.t_done - self.arrival
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+    def all_tokens(self) -> np.ndarray:
+        """Prompt plus everything generated so far (the stateless-decode
+        re-prefill input)."""
+        if not self.generated:
+            return self.tokens
+        return np.concatenate(
+            [self.tokens, np.asarray(self.generated, np.int32)]
+        )
 
 
 class FifoBatcher:
@@ -71,11 +93,13 @@ class ShapeBucketBatcher:
     the padded batch stays rectangular.
     """
 
-    def __init__(self, batch_size: int):
+    def __init__(self, batch_size: int, seq=None):
         self.batch_size = batch_size
         self.buckets: dict[Hashable, FifoBatcher] = {}
         self._seqs: dict[Hashable, deque[int]] = {}
-        self._push_seq = itertools.count()
+        # ``seq`` lets several queues share one arrival counter, so FIFO
+        # order is comparable across them (prefill buckets vs decode rows)
+        self._push_seq = seq if seq is not None else itertools.count()
 
     def push(self, key: Hashable, req: Request) -> None:
         bucket = self.buckets.get(key)
@@ -85,13 +109,29 @@ class ShapeBucketBatcher:
         bucket.push(req)
         self._seqs[key].append(next(self._push_seq))
 
-    def pop_batch(self) -> tuple[Hashable, list[Request]] | None:
-        """Drain one batch from the longest-waiting bucket, or None if idle."""
+    def head_seq(self) -> int | None:
+        """Push sequence number of the longest-waiting request, or None."""
+        heads = [s[0] for s in self._seqs.values() if s]
+        return min(heads) if heads else None
+
+    def pop_batch(
+        self, max_take: int | None = None
+    ) -> tuple[Hashable, list[Request]] | None:
+        """Drain one batch from the longest-waiting bucket, or None if idle.
+
+        ``max_take`` caps the batch below ``batch_size`` (e.g. to the number
+        of free cache slots at the replica); the rest of the bucket stays
+        queued.
+        """
         heads = [(s[0], k) for k, s in self._seqs.items() if s]
         if not heads:
             return None
         _, key = min(heads)
-        batch = self.buckets[key].drain(max_batches=1)[0]
+        take = self.batch_size if max_take is None else min(max_take, self.batch_size)
+        if take < 1:
+            return None
+        bucket = self.buckets[key]
+        batch = [bucket.queue.popleft() for _ in range(min(take, len(bucket.queue)))]
         seqs = self._seqs[key]
         for _ in batch:
             seqs.popleft()
@@ -101,15 +141,46 @@ class ShapeBucketBatcher:
         return sum(len(b) for b in self.buckets.values())
 
 
+class SlotRing:
+    """Ring allocator over a replica's cache slots.
+
+    Freed slots rejoin at the tail, so allocation cycles through the ring —
+    a retired request's rows are the last to be overwritten (friendly to
+    debugging and to future prefix reuse).
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self._free: deque[int] = deque(range(num_slots))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> int | None:
+        return self._free.popleft() if self._free else None
+
+    def free(self, slot: int) -> None:
+        if not (0 <= slot < self.num_slots):
+            raise ValueError(f"slot {slot} out of range")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} double-freed")
+        self._free.append(slot)
+
+
 def pad_tokens(reqs: list[Request], pad_id: int = 0) -> tuple[np.ndarray, np.ndarray]:
-    """Right-pad prompts to a common length; returns (tokens [B, S], lengths [B])."""
-    max_len = max(int(r.tokens.shape[0]) for r in reqs)
+    """Right-pad prompts (plus any generated suffix) to a common length;
+    returns (tokens [B, S], lengths [B])."""
+    toks = [r.all_tokens() for r in reqs]
+    max_len = max(int(t.shape[0]) for t in toks)
     B = len(reqs)
     out = np.full((B, max_len), pad_id, np.int32)
     lengths = np.zeros((B,), np.int32)
-    for i, r in enumerate(reqs):
-        n = int(r.tokens.shape[0])
-        out[i, :n] = r.tokens
+    for i, t in enumerate(toks):
+        n = int(t.shape[0])
+        out[i, :n] = t
         lengths[i] = n
     return out, lengths
 

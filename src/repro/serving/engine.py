@@ -13,26 +13,50 @@ logical replicas with Jetson-profiled service rates).  The engine:
   * advances a simulated clock with M/D/1 FIFO service at each replica, so
     measured delays follow the same queueing physics the optimizer models.
 
-Data plane (micro-batched): each replica owns a ``ShapeBucketBatcher``.
-Requests landing on a busy replica queue up; whenever the replica frees, it
-drains one shape-bucketed batch (up to ``batch_size`` requests of one input
-shape), runs a single jitted stage forward for the whole padded batch, and
-makes the batched exit decision in one device call — both the early-exit
-branches and the final head go through the fused ``exit_confidence`` kernel,
-so ``[B, vocab]`` logits never touch HBM on either path.  ``batch_size=1``
-reproduces the sequential per-request engine exactly (same clock, same
-exits); larger batches trade a little simulated queueing delay for an
-order-of-magnitude fewer device dispatches.
+Data plane (autoregressive, cache-threaded, continuously batched):
+
+``serve(..., gen_len=N)`` decodes up to N tokens per request.  A request's
+first pass is a *prefill* hop chain: stage 1 embeds the prompt, every stage
+runs the full-sequence forward, and — in cached mode — writes its stage-local
+KV/state caches into a **slot** of that replica's resident cache store.  The
+route sampled on this first pass is pinned per stage (``Request.path``), so
+each later token returns to the replicas that hold its caches.  Every
+subsequent token is a *decode* hop chain: stage 1 embeds one token, each
+stage runs a one-token cached step — per-row positions, attention through
+``kernels.ops.decode_attention`` (the Pallas flash-decode kernel on TPU) —
+so per-token work is O(1) in the prefix length instead of the O(prefix)
+re-prefill of the stateless baseline (``decode_mode="stateless"`` keeps that
+baseline runnable for A/B benchmarks).  For expanded-attention configs (GQA
+/ SSM blocks) the two modes — and the monolithic ``model.prefill`` +
+``model.decode_step`` reference — emit bitwise token-identical sequences;
+MLA configs decode through the absorbed-latent math, which matches the
+monolithic decode reference but, like all absorbed MLA inference, is not
+bitwise-equal to re-expanded full-sequence attention.
+
+Continuous batching: replicas own a ring of cache slots.  Whenever a replica
+frees at a stage boundary it forms the next batch from whatever waits —
+newly-arrived prompts are admitted into free slots alongside in-flight decode
+rows, and rows that take an early exit retire immediately, releasing their
+slots at every replica on their path without stalling the rest of the batch.
+Both the early-exit branches and the final head go through the fused
+``exit_confidence`` kernel, so ``[B, vocab]`` logits never touch HBM.
+
+Exit semantics per token: the first branch with conf >= c_h emits the token
+and terminates the request (a confident answer); otherwise the final head's
+token is appended and decoding continues to ``gen_len``.  ``gen_len=1``
+reproduces the paper's single-shot classification plane exactly.
 
 This is deliberately a single-process, event-stepped engine: the
-distributed *semantics* (who talks to whom, what information each node has)
-are faithful; only the transport is in-process.
+distributed *semantics* (who talks to whom, what information each node has,
+which replica holds which cache rows) are faithful; only the transport is
+in-process.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+from collections import deque
 from typing import Any
 
 import numpy as np
@@ -44,10 +68,12 @@ from repro.core import dto_ee
 from repro.core.simulator import RoutingCdf
 from repro.core.thresholds import ExitProfile
 from repro.core.types import DtoHyperParams, ModelProfile, Topology
+from repro.models import model as model_lib
 from repro.serving import steps
 from repro.serving.batching import (
     Request,
     ShapeBucketBatcher,
+    SlotRing,
     batch_tokens,
     padded_batch_size,
 )
@@ -63,7 +89,9 @@ class StagePrograms:
 
     One jitted callable per stage and per head; jax re-traces per input
     shape, so every (stage, padded-batch shape) bucket compiles once and is
-    then served from the executable cache.
+    then served from the executable cache.  The cached-decode plane adds a
+    per-stage prefill (cache-building), slot-write (scatter into the
+    replica's resident store), and cached one-token decode program.
     """
 
     def __init__(self, params: Any, cfg: ArchConfig):
@@ -73,6 +101,9 @@ class StagePrograms:
         self._stage = {}
         self._exit = {}
         self._final = steps.make_final_head_step(cfg)
+        self._prefill = {}
+        self._decode = {}
+        self._slot_write = {}
 
     def embed(self, tokens: jnp.ndarray) -> jnp.ndarray:
         return self._embed(self.params, tokens)
@@ -82,6 +113,27 @@ class StagePrograms:
         if stage_idx not in self._stage:
             self._stage[stage_idx] = steps.make_stage_forward(self.cfg, stage_idx)
         return self._stage[stage_idx](self.params, x)
+
+    def stage_prefill(self, stage_idx: int, x: jnp.ndarray, max_len: int):
+        """(x_out, stage caches [n_periods, B, max_len, ...]) for one stage."""
+        key = (stage_idx, max_len)
+        if key not in self._prefill:
+            self._prefill[key] = steps.make_stage_prefill(self.cfg, stage_idx, max_len)
+        return self._prefill[key](self.params, x)
+
+    def stage_decode(self, stage_idx: int, x, slot_caches, slots):
+        """One cached token per row against the replica's (donated) store."""
+        if stage_idx not in self._decode:
+            self._decode[stage_idx] = steps.make_stage_decode(self.cfg, stage_idx)
+        return self._decode[stage_idx](self.params, x, slot_caches, slots)
+
+    def slot_write(self, stage_idx: int, slot_caches, new_caches, slots):
+        if stage_idx not in self._slot_write:
+            self._slot_write[stage_idx] = steps.make_slot_write(self.cfg, stage_idx)
+        return self._slot_write[stage_idx](slot_caches, new_caches, slots)
+
+    def init_slot_caches(self, stage_idx: int, num_slots: int, max_len: int):
+        return model_lib.init_stage_slot_caches(self.cfg, stage_idx, num_slots, max_len)
 
     def exit_head(self, stage_idx: int, x_last: jnp.ndarray):
         """(confidence, token) of the exit branch after stage ``stage_idx``."""
@@ -101,17 +153,25 @@ class StagePrograms:
 
 @dataclasses.dataclass
 class ServeStats:
-    delays: list[float]
-    exit_stage: list[int]
-    confidences: list[float]
-    tokens: list[int]
-    rids: list[int] = dataclasses.field(default_factory=list)
+    delays: list = dataclasses.field(default_factory=list)
+    exit_stage: list = dataclasses.field(default_factory=list)
+    confidences: list = dataclasses.field(default_factory=list)
+    tokens: list = dataclasses.field(default_factory=list)  # last emitted token
+    rids: list = dataclasses.field(default_factory=list)
+    gen_tokens: list = dataclasses.field(default_factory=list)  # full sequences
+    arrivals: list = dataclasses.field(default_factory=list)
+    dones: list = dataclasses.field(default_factory=list)
     num_batches: int = 0
     num_forward_rows: int = 0  # padded rows pushed through stage forwards
+    num_real_rows: int = 0  # live rows among them (the rest is padding waste)
 
     def summary(self) -> dict:
         d = np.asarray(self.delays)
         es = np.asarray(self.exit_stage)
+        total_tokens = int(sum(len(g) for g in self.gen_tokens))
+        makespan = (
+            float(max(self.dones) - min(self.arrivals)) if self.dones else float("nan")
+        )
         return {
             "num_completed": int(d.size),
             "mean_delay": float(d.mean()) if d.size else float("nan"),
@@ -120,6 +180,19 @@ class ServeStats:
                 int(s): int((es == s).sum()) for s in np.unique(es)
             },
             "num_batches": self.num_batches,
+            # padded-row waste: fraction of stage-forward rows that were
+            # shape-padding rather than live requests
+            "num_forward_rows": self.num_forward_rows,
+            "num_real_rows": self.num_real_rows,
+            "padded_row_frac": (
+                1.0 - self.num_real_rows / self.num_forward_rows
+                if self.num_forward_rows
+                else 0.0
+            ),
+            "generated_tokens": total_tokens,
+            "sim_tokens_per_s": (
+                total_tokens / makespan if makespan and makespan > 0 else float("nan")
+            ),
         }
 
     def by_rid(self) -> dict[int, tuple[int, int]]:
@@ -127,6 +200,13 @@ class ServeStats:
         return {
             r: (s, t)
             for r, s, t in zip(self.rids, self.exit_stage, self.tokens)
+        }
+
+    def sequences_by_rid(self) -> dict[int, tuple[int, tuple[int, ...]]]:
+        """rid -> (exit_stage, full token sequence)."""
+        return {
+            r: (s, tuple(g))
+            for r, s, g in zip(self.rids, self.exit_stage, self.gen_tokens)
         }
 
 
@@ -190,15 +270,28 @@ class CollaborativeEngine:
         return self.state.thresholds
 
     # -- data plane ---------------------------------------------------------
-    def _stage_input(self, stage: int, reqs: list[Request], batch_size: int):
+    def _stage_input(
+        self,
+        stage: int,
+        reqs: list[Request],
+        batch_size: int,
+        pad_to: int | None = None,
+    ):
         """Assemble the padded [B, S, d] residual stream for one batch.
 
         Hidden states travel between replicas as host numpy buffers (the
         in-process stand-in for the network hop), so batch assembly is one
         concatenate + one upload instead of per-request device ops.
+        ``pad_to`` right-pads the token batch to a fixed sequence length
+        (stateless decode passes: a fixed shape keeps every pass's reductions
+        length-stable, so re-prefill stays bitwise identical to the
+        fixed-arena cached path — and one compiled program serves all steps).
         """
         if stage == 1:
-            return self.programs.embed(batch_tokens(reqs, batch_size))
+            toks = batch_tokens(reqs, batch_size)
+            if pad_to is not None and toks.shape[1] < pad_to:
+                toks = np.pad(toks, ((0, 0), (0, pad_to - toks.shape[1])))
+            return self.programs.embed(toks)
         hs = [r.hidden for r in reqs]
         B = padded_batch_size(len(reqs), batch_size)
         if B > len(reqs):
@@ -212,20 +305,46 @@ class CollaborativeEngine:
         duration: float = 5.0,
         arrival_rate: float | None = None,
         batch_size: int = 1,
+        gen_len: int = 1,
+        decode_mode: str | None = None,
+        num_slots: int | None = None,
     ) -> ServeStats:
         """Serve ``prompts`` arriving as a Poisson stream.
 
         Arrivals are a genuine Poisson process at ``arrival_rate`` (default:
         the topology's total external rate ``phi_ext.sum()``); ``duration``
-        is only the fallback window when no positive rate exists.  Each
-        request classifies its prompt's next token; exit thresholds are the
-        engine's current C.  ``batch_size`` sets the per-replica micro-batch
-        width: each replica drains shape-bucketed padded batches, one jitted
-        stage forward and one fused exit decision per batch.  Routing stays
-        faithful — every request samples its own path.
+        is only the fallback window when no positive rate exists.  Arrival
+        nodes are sampled proportional to each end device's external rate
+        ``phi_ext`` — the data plane sees the same traffic mix the optimizer
+        models.  Each request autoregressively decodes up to ``gen_len``
+        tokens (1 = the paper's single-shot classification); a token taken at
+        an early-exit branch terminates its request.  ``batch_size`` sets the
+        per-replica micro-batch width.  ``decode_mode``:
+
+          * ``"cached"``    (default for gen_len > 1): stage-local KV caches
+            live in per-replica slot rings; decode steps are one-token cached
+            programs and new prompts are admitted into running batches at
+            stage boundaries (continuous batching).
+          * ``"stateless"`` (default for gen_len == 1): every token re-runs
+            the full prefix through each stage — the re-prefill baseline.
+
+        Both modes emit token-identical sequences and exit decisions for
+        expanded-attention configs (see the module docstring for the MLA
+        absorbed-decode caveat).
         """
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        if gen_len < 1:
+            raise ValueError("gen_len must be >= 1")
+        if decode_mode is None:
+            decode_mode = "cached" if gen_len > 1 else "stateless"
+        if decode_mode not in ("cached", "stateless"):
+            raise ValueError("decode_mode must be 'cached' or 'stateless'")
+        cached = decode_mode == "cached"
+        if gen_len > 1 and self.cfg.frontend != "tokens":
+            raise ValueError("autoregressive decode needs a token frontend")
+        if any(int(p.shape[0]) < 1 for p in prompts):
+            raise ValueError("prompts must be non-empty")
         topo, profile = self.topo, self.profile
         programs = self.programs
         H = profile.num_stages
@@ -240,40 +359,113 @@ class CollaborativeEngine:
             arrivals = np.cumsum(self.rng.exponential(1.0 / rate, size=n))
         else:
             arrivals = np.sort(self.rng.uniform(0.0, duration, size=n))
+        # arrival nodes follow the optimizer's traffic model: each request
+        # lands on an ED with probability proportional to its phi_ext
+        ed_w = topo.phi_ext[eds]
+        if n and ed_w.sum() > 0:
+            ed_idx = self.rng.choice(len(eds), size=n, p=ed_w / ed_w.sum())
+        else:
+            ed_idx = np.arange(n) % max(len(eds), 1)
 
-        stats = ServeStats([], [], [], [])
+        stats = ServeStats()
         # p is fixed for the duration of the serve call: one precomputed CDF
         # serves every routing sample (shared with the simulator)
         route = RoutingCdf(topo, self.p)
         # event heap: (time, seq, kind, payload)
         #   kind 0: transfer done, request joins ``node``   payload (req, node)
         #   kind 1: batch service done at ``node``          payload (node, reqs,
-        #           conf [B] | None, tok [B] | None)
+        #           conf [B] | None, tok [B] | None, is_decode_pass)
         heap: list = []
         seq = itertools.count()
-        pending = {
-            int(v): ShapeBucketBatcher(batch_size)
-            for v in range(topo.num_nodes)
-            if topo.node_stage[v] > 0
-        }
-        busy_until = {v: 0.0 for v in pending}
+        wait_seq = itertools.count()  # FIFO order shared across queue kinds
+        es_nodes = [int(v) for v in range(topo.num_nodes) if topo.node_stage[v] > 0]
+        pending = {v: ShapeBucketBatcher(batch_size, seq=wait_seq) for v in es_nodes}
+        busy_until = {v: 0.0 for v in es_nodes}
+        decode_q: dict[int, deque] = {v: deque() for v in es_nodes}
+        rings: dict[int, SlotRing] = {}
+        slot_store: dict[int, Any] = {}
+        trash = -1
+        max_len = max((int(p.shape[0]) for p in prompts), default=1) + gen_len
+        if cached:
+            n_slots = num_slots if num_slots is not None else max(2 * batch_size, 4)
+            trash = n_slots  # extra store row absorbing padded-row writes
+            for v in es_nodes:
+                rings[v] = SlotRing(n_slots)
+                slot_store[v] = programs.init_slot_caches(
+                    int(topo.node_stage[v]), n_slots + 1, max_len
+                )
 
-        def dispatch(node: int, now: float) -> None:
-            """If ``node`` is free, drain one shape bucket and run it."""
-            if now < busy_until[node]:
-                return
-            popped = pending[node].pop_batch()
-            if popped is None:
-                return
-            _, reqs = popped
+        def run_prefill(node: int, reqs: list[Request], now: float) -> None:
             h = int(topo.node_stage[node])
-            x = programs.run_stage(h, self._stage_input(h, reqs, batch_size))
+            # stateless decode passes run at a FIXED padded length: causal
+            # masking makes the pad rows inert, the valid rows stay bitwise
+            # identical to the fixed-size cached arena, and one compiled
+            # program serves every step of the generation
+            stateless_decode = not cached and reqs[0].phase == "decode"
+            pad_to = max_len if stateless_decode else None
+            x_in = self._stage_input(h, reqs, batch_size, pad_to=pad_to)
+            if cached:
+                x, caches = programs.stage_prefill(h, x_in, max_len)
+                slots = np.full((int(x.shape[0]),), trash, np.int32)
+                for i, r in enumerate(reqs):
+                    s = rings[node].alloc()
+                    assert s is not None, "dispatch admitted beyond ring capacity"
+                    r.slots[node] = s
+                    slots[i] = s
+                slot_store[node] = programs.slot_write(
+                    h, slot_store[node], caches, slots
+                )
+            else:
+                x = programs.run_stage(h, x_in)
+            last = (
+                int(reqs[0].all_tokens().shape[0]) if stateless_decode else None
+            )
+            finish_pass(node, reqs, x, now, h, is_decode_pass=False, last_valid=last)
+
+        def run_decode(node: int, reqs: list[Request], now: float) -> None:
+            h = int(topo.node_stage[node])
+            B = len(reqs)
+            Bp = padded_batch_size(B, batch_size)
+            slots = np.full((Bp,), trash, np.int32)
+            for i, r in enumerate(reqs):
+                slots[i] = r.slots[node]
+            if h == 1:
+                toks = np.zeros((Bp, 1), np.int32)
+                for i, r in enumerate(reqs):
+                    toks[i, 0] = r.generated[-1]
+                x_in = programs.embed(toks)
+            else:
+                hs = [r.hidden for r in reqs]
+                if Bp > B:
+                    hs.append(np.zeros((Bp - B,) + hs[0].shape[1:], hs[0].dtype))
+                x_in = np.concatenate(hs, axis=0) if len(hs) > 1 else hs[0]
+            x, slot_store[node] = programs.stage_decode(
+                h, x_in, slot_store[node], slots
+            )
+            finish_pass(node, reqs, x, now, h, is_decode_pass=True)
+
+        def finish_pass(
+            node: int,
+            reqs: list[Request],
+            x,
+            now: float,
+            h: int,
+            is_decode_pass: bool,
+            last_valid: int | None = None,
+        ) -> None:
+            """Shared tail of a stage batch: heads, handoff buffers, clock.
+
+            ``last_valid`` points the heads at the last REAL position of a
+            right-padded stateless decode pass (the heads otherwise read the
+            final position).
+            """
             b = self.stage_to_branch.get(h)
+            x_heads = x if last_valid is None else x[:, last_valid - 1 : last_valid]
             conf = tok = None
             if h == H:
-                conf, tok = programs.final_head(x)
+                conf, tok = programs.final_head(x_heads)
             elif b is not None:
-                conf, tok = programs.exit_head(h, x)
+                conf, tok = programs.exit_head(h, x_heads)
             if h < H:
                 x_np = np.asarray(x)
                 for i, r in enumerate(reqs):
@@ -283,37 +475,98 @@ class CollaborativeEngine:
                 tok = np.asarray(tok)[: len(reqs)]
             stats.num_batches += 1
             stats.num_forward_rows += int(x.shape[0])
-            service = len(reqs) * profile.alpha[h - 1] / float(topo.mu[node])
+            stats.num_real_rows += len(reqs)
+            if is_decode_pass:
+                # clock model: alpha[h] is the profiled cost of one TASK
+                # (= its prompt) at stage h, so one cached token is charged
+                # that task's per-token share, alpha / prompt_len — O(1) in
+                # the prefix versus the full alpha a stateless re-prefill
+                # pass pays
+                service = (
+                    profile.alpha[h - 1]
+                    / float(topo.mu[node])
+                    * sum(1.0 / r.prompt_len for r in reqs)
+                )
+            else:
+                service = len(reqs) * profile.alpha[h - 1] / float(topo.mu[node])
             done = max(now, busy_until[node]) + service
             busy_until[node] = done
-            heapq.heappush(heap, (done, next(seq), 1, (node, reqs, conf, tok)))
+            heapq.heappush(
+                heap, (done, next(seq), 1, (node, reqs, conf, tok, is_decode_pass))
+            )
+
+        def dispatch(node: int, now: float) -> None:
+            """If ``node`` is free, form one batch and run it.
+
+            FIFO across work kinds by arrival order, except that prompts
+            blocked on slot space never stall waiting decode rows — that is
+            the continuous-batching invariant.
+            """
+            if now < busy_until[node]:
+                return
+            ph = pending[node].head_seq()
+            if ph is not None and cached and rings[node].available == 0:
+                ph = None  # admission blocked until a retirement frees a slot
+            dq = decode_q[node]
+            dh = dq[0][0] if dq else None
+            if ph is None and dh is None:
+                return
+            if dh is not None and (ph is None or dh < ph):
+                reqs = [dq.popleft()[1] for _ in range(min(batch_size, len(dq)))]
+                run_decode(node, reqs, now)
+                return
+            max_take = rings[node].available if cached else None
+            popped = pending[node].pop_batch(max_take)
+            if popped is None:
+                return
+            _, reqs = popped
+            run_prefill(node, reqs, now)
 
         def enqueue(req: Request, node: int, now: float) -> None:
             h = int(topo.node_stage[node])
-            key = (
-                ("tok", int(req.tokens.shape[0]))
-                if h == 1
-                else ("hid", tuple(req.hidden.shape[1:]))
-            )
             req.node = node
             req.stage = h
-            pending[node].push(key, req)
+            if req.phase == "decode" and cached:
+                decode_q[node].append((next(wait_seq), req))
+            else:
+                if req.phase == "decode":
+                    # stateless decode pass: padded shapes are uniform, so
+                    # bucket by the VALID prefix length (heads slice there)
+                    key = ("dec", int(req.all_tokens().shape[0]))
+                elif h == 1:
+                    key = ("tok", int(req.all_tokens().shape[0]))
+                else:
+                    key = ("hid", tuple(req.hidden.shape[1:]))
+                pending[node].push(key, req)
             dispatch(node, now)
 
-        def finish(req: Request, node: int, done: float, c: float, t_: int, h: int):
+        def finish(req: Request, done: float, c: float, h: int) -> None:
             req.exited, req.exit_stage = True, h
-            req.confidence, req.output_token = c, t_
+            req.confidence, req.output_token = c, req.generated[-1]
             req.t_done = done
             stats.delays.append(req.delay)
             stats.exit_stage.append(h)
             stats.confidences.append(c)
-            stats.tokens.append(t_)
+            stats.tokens.append(req.generated[-1])
             stats.rids.append(req.rid)
+            stats.gen_tokens.append(tuple(req.generated))
+            stats.arrivals.append(req.arrival)
+            stats.dones.append(done)
+            if cached and req.slots:
+                freed = list(req.slots.items())
+                req.slots = {}
+                for v, s in freed:
+                    rings[v].free(s)
+                for v, _ in freed:
+                    # a freed slot can unblock admission-waiting prompts
+                    if pending[v].head_seq() is not None:
+                        dispatch(v, done)
 
         for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
-            ed = int(eds[i % len(eds)])
+            ed = int(eds[ed_idx[i]])
             req = Request(rid=i, tokens=np.asarray(prompt, np.int32), arrival=t)
             nxt, e = route.sample(self.rng, ed)
+            req.path[1] = (nxt, int(e))
             t_cm = profile.beta[0] / float(topo.edge_rate[e])
             heapq.heappush(heap, (t + t_cm, next(seq), 0, (req, nxt)))
 
@@ -324,18 +577,40 @@ class CollaborativeEngine:
                 enqueue(req, node, now)
                 continue
             # kind 1: batch done — batched exit decision already on device
-            node, reqs, conf, tok = payload
+            node, reqs, conf, tok, is_decode_pass = payload
             h = int(topo.node_stage[node])
             b = self.stage_to_branch.get(h)
             for i, req in enumerate(reqs):
                 if h == H:
-                    finish(req, node, now, float(conf[i]), int(tok[i]), h)
+                    req.generated.append(int(tok[i]))
+                    if len(req.generated) >= gen_len:
+                        finish(req, now, float(conf[i]), h)
+                        continue
+                    # loop back for the next token: one-token payload to the
+                    # request's pinned stage-1 replica
+                    req.phase = "decode"
+                    node1, e1 = req.path[1]
+                    t_cm = (
+                        profile.beta[0]
+                        / float(topo.edge_rate[e1])
+                        / req.prompt_len
+                    )
+                    heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, node1)))
                     continue
                 if b is not None and float(conf[i]) >= self.thresholds[b]:
-                    finish(req, node, now, float(conf[i]), int(tok[i]), h)
+                    # confident early exit: emit and retire
+                    req.generated.append(int(tok[i]))
+                    finish(req, now, float(conf[i]), h)
                     continue
-                nxt, e = route.sample(self.rng, node)
+                nh = h + 1
+                if nh in req.path:
+                    nxt, e = req.path[nh]
+                else:
+                    nxt, e = route.sample(self.rng, node)
+                    req.path[nh] = (nxt, int(e))
                 t_cm = profile.beta[h] / float(topo.edge_rate[e])
+                if is_decode_pass:
+                    t_cm /= req.prompt_len
                 heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, nxt)))
             dispatch(node, now)
 

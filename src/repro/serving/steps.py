@@ -6,13 +6,28 @@ traced vector so one compiled program serves every threshold setting DTO-EE
 picks.  The per-stage builders below are what the micro-batched data plane
 runs once per padded batch (jax re-traces per shape, so each builder yields
 one compiled program per batch bucket).
+
+The cache-threaded decode plane adds three per-stage programs:
+
+  * ``make_stage_prefill`` — stage forward that also builds the stage's
+    caches (one request row each);
+  * ``make_slot_write``    — scatter a prefill batch's cache rows into the
+    replica's slot-resident cache store;
+  * ``make_stage_decode``  — one token per row against the slot store:
+    gather the batch's slots, run the ragged cached decode (per-row
+    positions, flash-decode attention kernel), scatter the rows back.
+
+Slot stores are donated through the decode/write programs so XLA updates
+them in place instead of copying the whole KV arena every token.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as model_lib
@@ -70,6 +85,68 @@ def make_final_head_step(cfg: ArchConfig):
     return final_head_step
 
 
+def make_stage_prefill(cfg: ArchConfig, stage_idx: int, max_len: int):
+    """Residual stream through stage ``stage_idx``, building its caches.
+
+    Returns ``(x_out [B, S, d], stage_caches)`` with cache leaves shaped
+    ``[n_periods, B, max_len, ...]`` — one row per request, ready to scatter
+    into a replica's slot store.
+    """
+
+    @jax.jit
+    def stage_prefill(params: Any, x: jnp.ndarray):
+        return model_lib.prefill_stage(params, stage_idx, x, cfg, max_len)
+
+    return stage_prefill
+
+
+def make_slot_write(cfg: ArchConfig, stage_idx: int):
+    """Scatter a prefill batch's cache rows into the slot store.
+
+    ``slots`` is int32 [B]; padded rows point at the store's trash slot.
+    The store is donated — on device the write is in-place.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def slot_write(slot_caches, new_caches, slots: jnp.ndarray):
+        def wr(buf, new):
+            # "pos" rows come out of prefill as one scalar per period
+            # ([P]); everything else matches the store's rank
+            if new.ndim < buf.ndim:
+                new = new[..., None]
+            return buf.at[:, slots].set(new.astype(buf.dtype))
+
+        return jax.tree.map(wr, slot_caches, new_caches)
+
+    return slot_write
+
+
+def make_stage_decode(cfg: ArchConfig, stage_idx: int):
+    """One cached decode token per row against the replica's slot store.
+
+    ``x`` is the embedded/last-stage residual [B, 1, d]; ``slots`` int32 [B]
+    names each row's cache slot.  Gathers the rows, runs the ragged decode
+    (per-row positions; attention through ``kernels.ops.decode_attention``),
+    scatters the updated rows back, and returns the stage output.  O(1) model
+    FLOPs per token — the prefix is never recomputed.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def stage_decode(params: Any, x: jnp.ndarray, slot_caches, slots: jnp.ndarray):
+        gathered = jax.tree.map(lambda a: jnp.take(a, slots, axis=1), slot_caches)
+        x_out, new_rows = model_lib.decode_stage_ragged(
+            params, stage_idx, x, gathered, cfg
+        )
+        new_store = jax.tree.map(
+            lambda buf, new: buf.at[:, slots].set(new.astype(buf.dtype)),
+            slot_caches,
+            new_rows,
+        )
+        return x_out, new_store
+
+    return stage_decode
+
+
 def select_exit(
     next_token: jnp.ndarray,  # [B] final-head tokens
     exit_conf: jnp.ndarray,  # [B, n_exits]
@@ -122,3 +199,66 @@ def make_decode_step(cfg: ArchConfig):
         }
 
     return decode_step
+
+
+_MONO_PROGRAMS: dict = {}
+
+
+def _monolithic_programs(cfg: ArchConfig, max_len: int):
+    """Jitted ``model.prefill`` / ``model.decode_step`` for the reference
+    generator, cached per (cfg, max_len) so repeated calls reuse programs."""
+    key = (cfg, max_len)
+    if key not in _MONO_PROGRAMS:
+        _MONO_PROGRAMS[key] = (
+            jax.jit(
+                lambda params, batch: model_lib.prefill(params, batch, cfg, max_len)
+            ),
+            jax.jit(
+                lambda params, batch, caches: model_lib.decode_step(
+                    params, batch, caches, cfg
+                )
+            ),
+        )
+    return _MONO_PROGRAMS[key]
+
+
+def monolithic_generate(
+    params: Any,
+    cfg: ArchConfig,
+    prompt: np.ndarray,  # [S] int32
+    thresholds: np.ndarray,  # [n_early_branches]
+    gen_len: int,
+    max_len: int | None = None,
+) -> tuple[list[int], int]:
+    """Single-host reference: ``model.prefill`` + ``model.decode_step``.
+
+    Applies the paper's exit rule per token — the first early branch with
+    conf >= c_b emits the token AND terminates the generation (a confident
+    answer); otherwise the final head's token is appended and decoding
+    continues up to ``gen_len``.  Returns ``(tokens, exit_stage_of_last)``.
+    The staged engine's cache-threaded decode must be token-identical to
+    this, which is what ``tests/test_decode_serving.py`` asserts.
+    """
+    S = int(prompt.shape[0])
+    if max_len is None:
+        max_len = S + gen_len
+    exit_stages = list(cfg.exit_stages)
+    H = cfg.num_stages
+
+    def pick(conf, tok, final_tok):
+        for b, stage in enumerate(exit_stages):
+            if float(conf[0, b]) >= float(thresholds[b]):
+                return int(tok[0, b]), stage
+        return int(final_tok[0]), H
+
+    prefill_fn, decode_fn = _monolithic_programs(cfg, max_len)
+    batch = {"tokens": jnp.asarray(prompt[None], jnp.int32)}
+    next_tok, conf, etok, caches = prefill_fn(params, batch)
+    token, stage = pick(np.asarray(conf), np.asarray(etok), np.asarray(next_tok))
+    tokens = [token]
+    while stage == H and len(tokens) < gen_len:
+        db = {"tokens": jnp.asarray([[tokens[-1]]], jnp.int32)}
+        next_tok, conf, etok, caches = decode_fn(params, db, caches)
+        token, stage = pick(np.asarray(conf), np.asarray(etok), np.asarray(next_tok))
+        tokens.append(token)
+    return tokens, stage

@@ -1,0 +1,269 @@
+"""Cache-threaded autoregressive decode plane: staged engine vs monolithic
+``model.prefill`` + ``model.decode_step``, continuous batching, slot rings,
+and the ragged one-token stage programs."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.profiles import profile_from_arch
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import NetworkSpec, build_edge_network
+from repro.core.types import DtoHyperParams
+from repro.models import model as model_lib
+from repro.serving import (
+    CollaborativeEngine,
+    Request,
+    ShapeBucketBatcher,
+    SlotRing,
+    monolithic_generate,
+)
+
+GEN = 6
+# mid-range threshold: the fixed workload below then mixes requests exiting
+# early on token 1, mid-generation, and running to gen_len (verified mix:
+# exit stages {2, 3, 4}, sequence lengths 1..GEN)
+THRESHOLD = 0.1
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("stablelm-1.6b").reduced(vocab_size=128)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    profile = profile_from_arch(cfg)
+    topo = build_edge_network(
+        seed=0, profile=profile, spec=NetworkSpec(num_eds=4, es_per_stage=(2, 2))
+    )
+    ep = synthetic_validation(seed=1, profile=profile)
+    eng = CollaborativeEngine(
+        params, cfg, topo, profile, ep, DtoHyperParams(rounds=20), seed=0
+    )
+    eng.configuration_phase()
+    eng.state.thresholds = np.full_like(eng.state.thresholds, THRESHOLD)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(2)
+    return [
+        rng.integers(0, 128, size=length).astype(np.int32)
+        for length in (12, 8, 12, 8, 12, 8, 12, 8)
+    ]
+
+
+@pytest.fixture(scope="module")
+def reference(engine, prompts):
+    """Monolithic single-host ground truth, per request."""
+    return {
+        i: (stage, tuple(toks))
+        for i, p in enumerate(prompts)
+        for toks, stage in [
+            monolithic_generate(
+                engine.programs.params, engine.cfg, p, engine.thresholds, GEN
+            )
+        ]
+    }
+
+
+def _serve(engine, prompts, seed=7, **kw):
+    engine.rng = np.random.default_rng(seed)
+    return engine.serve(prompts, arrival_rate=1e5, batch_size=4, gen_len=GEN, **kw)
+
+
+# ---------------------------------------------------------------------------
+# token-identical equivalence: staged+cached == staged+stateless == monolithic
+# ---------------------------------------------------------------------------
+
+
+def test_reference_mixes_early_and_late_exits(reference):
+    lens = sorted(len(toks) for _, toks in reference.values())
+    assert lens[0] == 1 and lens[-1] == GEN
+    assert any(1 < n < GEN for n in lens)  # mid-generation early exit
+
+
+def test_cached_decode_matches_monolithic(engine, prompts, reference):
+    stats = _serve(engine, prompts, decode_mode="cached")
+    assert stats.sequences_by_rid() == reference
+    assert len(stats.delays) == len(prompts)
+    assert all(np.isfinite(stats.delays))
+
+
+def test_stateless_decode_matches_monolithic(engine, prompts, reference):
+    stats = _serve(engine, prompts, decode_mode="stateless")
+    assert stats.sequences_by_rid() == reference
+
+
+def test_continuous_batching_admission_mid_decode(engine, prompts, reference):
+    """Slow arrivals: later prompts are admitted into replicas whose slot
+    rings already hold mid-decode residents; outputs must not change."""
+    engine.rng = np.random.default_rng(11)
+    stats = engine.serve(
+        prompts, arrival_rate=50.0, batch_size=4, gen_len=GEN, num_slots=3
+    )
+    assert stats.sequences_by_rid() == reference
+
+
+def test_early_exit_retires_slots_under_pressure(engine, prompts, reference):
+    """A 2-slot ring forces admission to wait on retirements; early-exited
+    rows must free their slots at every stage they visited."""
+    stats = _serve(engine, prompts, num_slots=2)
+    assert stats.sequences_by_rid() == reference
+    assert len(stats.delays) == len(prompts)
+
+
+def test_cached_decode_batch_size_invariant(engine, prompts):
+    a = _serve(engine, prompts, seed=9, decode_mode="cached")
+    engine.rng = np.random.default_rng(9)
+    b = engine.serve(prompts, arrival_rate=1e5, batch_size=1, gen_len=GEN)
+    assert a.sequences_by_rid() == b.sequences_by_rid()
+
+
+def test_classification_default_unchanged(engine, prompts, reference):
+    """gen_len=1 keeps the paper's single-shot semantics: one token, exit at
+    the first confident branch; the token equals the reference's first."""
+    engine.rng = np.random.default_rng(7)
+    stats = engine.serve(prompts, arrival_rate=1e5, batch_size=4)
+    assert len(stats.delays) == len(prompts)
+    for rid, (_, toks) in reference.items():
+        assert stats.sequences_by_rid()[rid][1] == toks[:1]
+
+
+# ---------------------------------------------------------------------------
+# ragged per-stage programs == monolithic stage math
+# ---------------------------------------------------------------------------
+
+
+def test_ragged_stage_decode_matches_monolithic(engine):
+    """Per-row-position cached decode (slot layout) reproduces the scalar-
+    position monolithic decode exactly when rows share a position."""
+    cfg = engine.cfg
+    params = engine.programs.params
+    rng = np.random.default_rng(3)
+    B, S, max_len = 3, 10, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    _, _, _, caches = model_lib.prefill(params, {"tokens": toks}, cfg, max_len)
+    step = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    x = model_lib._embed_inputs(params, {"tokens": step}, cfg)
+
+    x_mono = x
+    mono_caches = caches
+    x_rag = x
+    for stage_idx in range(1, cfg.num_stages + 1):
+        x_mono, mono_nc = model_lib._decode_stage(
+            params["stages"][stage_idx - 1], x_mono, mono_caches[stage_idx - 1], cfg
+        )
+        # ragged layout: same rows, pos as a per-row vector
+        rag_cache = jax.tree.map(lambda a: a, caches[stage_idx - 1])
+
+        def vec_pos(c):
+            return {
+                k: (jnp.broadcast_to(v, (v.shape[0], B)) if k == "pos" else v)
+                for k, v in c.items()
+            }
+
+        rag_cache = tuple(vec_pos(c) for c in rag_cache)
+        x_rag, _ = model_lib.decode_stage_ragged(params, stage_idx, x_rag, rag_cache, cfg)
+        np.testing.assert_array_equal(np.asarray(x_mono), np.asarray(x_rag))
+        mono_caches = list(mono_caches)
+        mono_caches[stage_idx - 1] = mono_nc
+
+
+def test_slot_store_rows_independent(engine):
+    """Writing one request's prefill rows into a slot store and decoding it
+    must be unaffected by unrelated residents (row isolation)."""
+    from repro.serving import steps
+
+    cfg = engine.cfg
+    params = engine.programs.params
+    rng = np.random.default_rng(4)
+    S, max_len, n_slots = 8, 14, 4
+    store = model_lib.init_stage_slot_caches(cfg, 1, n_slots + 1, max_len)
+    write = steps.make_slot_write(cfg, 1)
+    decode = steps.make_stage_decode(cfg, 1)
+    prefill = steps.make_stage_prefill(cfg, 1, max_len)
+
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, S)), jnp.int32)
+    x = model_lib._embed_inputs(params, {"tokens": toks}, cfg)
+    x_out, caches = prefill(params, x)
+    store = write(store, caches, jnp.asarray([2, 0], jnp.int32))
+
+    step = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 1)), jnp.int32)
+    xs = model_lib._embed_inputs(params, {"tokens": step}, cfg)
+    # decode the two residents in opposite slot order; then one at a time
+    y_both, store2 = decode(params, xs, store, jnp.asarray([2, 0], jnp.int32))
+    del store2
+    store_b = model_lib.init_stage_slot_caches(cfg, 1, n_slots + 1, max_len)
+    store_b = write(store_b, caches, jnp.asarray([2, 0], jnp.int32))
+    y_one, _ = decode(params, xs[:1], store_b, jnp.asarray([2], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(y_both)[:1], np.asarray(y_one))
+
+
+# ---------------------------------------------------------------------------
+# padded-row accounting + slot ring
+# ---------------------------------------------------------------------------
+
+
+def test_summary_reports_padded_waste_and_tokens(engine, prompts):
+    stats = _serve(engine, prompts, decode_mode="cached")
+    s = stats.summary()
+    assert s["num_real_rows"] <= s["num_forward_rows"]
+    assert 0.0 <= s["padded_row_frac"] < 1.0
+    assert s["generated_tokens"] == sum(len(g) for g in stats.gen_tokens)
+    assert np.isfinite(s["sim_tokens_per_s"]) and s["sim_tokens_per_s"] > 0
+
+
+def test_slot_ring_alloc_free_cycle():
+    ring = SlotRing(2)
+    a, b = ring.alloc(), ring.alloc()
+    assert {a, b} == {0, 1}
+    assert ring.alloc() is None and ring.available == 0
+    ring.free(a)
+    assert ring.available == 1 and ring.alloc() == a
+    with pytest.raises(ValueError):
+        ring.free(5)
+
+
+def test_slot_ring_rejects_double_free():
+    ring = SlotRing(3)
+    s = ring.alloc()
+    ring.free(s)
+    with pytest.raises(ValueError):
+        ring.free(s)
+
+
+def test_shape_bucket_batcher_partial_take():
+    b = ShapeBucketBatcher(batch_size=4)
+    for rid in range(5):
+        b.push("a", Request(rid=rid, tokens=np.arange(3), arrival=float(rid)))
+    assert b.head_seq() == 0
+    key, batch = b.pop_batch(max_take=2)
+    assert [r.rid for r in batch] == [0, 1]
+    key, batch = b.pop_batch()
+    assert [r.rid for r in batch] == [2, 3, 4]
+    assert b.head_seq() is None and b.pop_batch() is None
+
+
+def test_arrival_nodes_follow_phi_ext(engine, prompts):
+    """End-device assignment samples proportional to phi_ext, not round-robin:
+    zeroing all-but-one ED's external rate must route every request there."""
+    topo = engine.topo
+    eds = topo.nodes_at_stage(0)
+    keep = int(eds[1])
+    saved = topo.phi_ext.copy()
+    try:
+        topo.phi_ext[eds] = 0.0
+        topo.phi_ext[keep] = 5.0
+        engine.rng = np.random.default_rng(3)
+        n = len(prompts)
+        ed_w = topo.phi_ext[eds]
+        idx = engine.rng.choice(len(eds), size=n, p=ed_w / ed_w.sum())
+        assert all(int(eds[i]) == keep for i in idx)
+        # the engine draws from the same distribution: serve() must complete
+        engine.rng = np.random.default_rng(3)
+        stats = engine.serve(prompts, arrival_rate=1e5, batch_size=4)
+        assert len(stats.delays) == n
+    finally:
+        topo.phi_ext[:] = saved
