@@ -1,11 +1,19 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench bench-decode bench-smoke lint
+.PHONY: test test-cov fuzz bench bench-decode bench-paged bench-smoke lint
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
+
+# tier-1 with line coverage gate (needs pytest-cov from requirements-dev.txt)
+test-cov:
+	$(PYTHON) -m pytest -q --cov=repro --cov-fail-under=70
+
+# seeded hypothesis fuzz of the BlockAllocator properties (~2 min in CI)
+fuzz:
+	HYPOTHESIS_PROFILE=ci-fuzz $(PYTHON) -m pytest -q tests/test_paging_properties.py --hypothesis-seed=0
 
 # serving throughput + vectorized simulator; writes BENCH_serving.json
 bench:
@@ -15,10 +23,16 @@ bench:
 bench-decode:
 	$(PYTHON) benchmarks/decode_throughput.py
 
-# CI-sized decode bench: tiny workload, asserts the cached/stateless/
-# monolithic outputs agree and the BENCH_decode.json schema holds
+# paged vs dense slot caches at equal KV bytes; writes BENCH_paged.json
+bench-paged:
+	$(PYTHON) benchmarks/decode_throughput.py --cache-layout paged
+
+# CI-sized decode benches: tiny workloads, assert the cached/stateless/
+# monolithic outputs agree (and paged == dense bitwise with >= 2x in-flight
+# at equal KV bytes) and that the JSON schemas hold
 bench-smoke:
 	$(PYTHON) benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_smoke.json
+	$(PYTHON) benchmarks/decode_throughput.py --smoke --cache-layout paged --out /tmp/BENCH_paged_smoke.json
 
 # syntax check of every tree (no third-party linter baked into the image;
 # swap in ruff/pyflakes here once available)

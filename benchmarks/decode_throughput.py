@@ -1,15 +1,22 @@
-"""Decode throughput: cache-threaded decode vs stateless re-prefill.
+"""Decode throughput: cache-threaded decode vs stateless re-prefill, and
+paged vs dense slot-cache capacity.
 
-Runs ``CollaborativeEngine.serve`` at gen_len in {8, 32} in both decode
-modes on one fixed workload (same prompts, same arrival process, same
-thresholds), asserts token-identical sequences and exit decisions between
-the modes AND against the monolithic ``model.prefill`` + ``model.decode_step``
-reference, and measures wall-clock decode tokens/s.  The cached mode does
-O(1) work per token per stage; the stateless baseline recomputes the full
-prefix at every stage on every step — the waste this PR removes.  Results
-land in ``BENCH_decode.json``.
+Default mode runs ``CollaborativeEngine.serve`` at gen_len in {8, 32} in
+both decode modes on one fixed workload (same prompts, same arrival process,
+same thresholds), asserts token-identical sequences and exit decisions
+between the modes AND against the monolithic ``model.prefill`` +
+``model.decode_step`` reference, and measures wall-clock decode tokens/s.
+Results land in ``BENCH_decode.json``.
+
+``--cache-layout paged`` instead A/Bs the PAGED slot store against the dense
+layout at EQUAL KV bytes (same pool token capacity as the dense arenas) on a
+production-shaped workload — mixed prompt lengths plus shared-prefix groups —
+asserts bitwise-identical tokens, and records how many more requests the
+paged replica holds in flight in the same memory, with prefix-hit and
+block-occupancy stats.  Results land in ``BENCH_paged.json``.
 
     PYTHONPATH=src python benchmarks/decode_throughput.py [--out BENCH_decode.json]
+    PYTHONPATH=src python benchmarks/decode_throughput.py --cache-layout paged
     PYTHONPATH=src python benchmarks/decode_throughput.py --smoke   # CI schema check
 """
 from __future__ import annotations
@@ -156,6 +163,168 @@ def bench_decode(
     }
 
 
+def _kv_token_bytes(cfg, max_len: int) -> list[int]:
+    """Per-stage bytes of sequence-dim (pageable) cache leaves per token of
+    capacity (stages may hold different period counts)."""
+    per_stage = []
+    for stage_idx in range(1, cfg.num_stages + 1):
+        dense = model_lib.init_stage_slot_caches(cfg, stage_idx, 1, max_len)
+        total = 0
+        for period in dense:
+            for key, leaf in period.items():
+                if key in model_lib.PAGED_CACHE_LEAVES:
+                    total += leaf.nbytes
+        per_stage.append(total // max_len)
+    return per_stage
+
+
+def _paged_prompts(rng, vocab: int, n_groups: int, group: int, n_long: int):
+    """Production-shaped mix: groups of short requests sharing a 48-token
+    prompt prefix (system-prompt style) plus a few long-context requests.
+    Short rows waste most of a dense ``max_len`` arena — the memory the
+    paged layout reclaims."""
+    prompts = []
+    for _ in range(n_groups):
+        common = rng.integers(0, vocab, size=48).astype(np.int32)
+        for _ in range(group):
+            own = rng.integers(0, vocab, size=int(rng.integers(8, 24)))
+            prompts.append(np.concatenate([common, own.astype(np.int32)]))
+    for _ in range(n_long):
+        prompts.append(rng.integers(0, vocab, size=384).astype(np.int32))
+    return prompts
+
+
+def bench_paged(
+    eng: CollaborativeEngine,
+    gen_len: int,
+    block_size: int,
+    dense_slots: int,
+    arrival_rate: float,
+    serve_seed: int = 123,
+    n_groups: int = 4,
+    group: int = 4,
+    n_long: int = 4,
+) -> dict:
+    rng = np.random.default_rng(0)
+    prompts = _paged_prompts(rng, eng.cfg.vocab_size, n_groups, group, n_long)
+    max_len = max(int(p.shape[0]) for p in prompts) + gen_len
+    # equal KV bytes: the paged pool gets the dense arenas' token capacity
+    # (dense_slots * max_len tokens), rounded DOWN to block granularity so
+    # the paged run never holds more KV memory; slot rings are bookkeeping
+    # rows (pos only for attention configs), so the paged run may hold many
+    # more sequences in the same KV memory
+    num_blocks = (dense_slots * max_len) // block_size
+    paged_slots = 8 * dense_slots
+
+    reference = {}
+    for i, p in enumerate(prompts):
+        toks, stage = monolithic_generate(
+            eng.programs.params, eng.cfg, p, eng.thresholds, gen_len
+        )
+        reference[i] = (stage, tuple(toks))
+
+    runs: dict[str, dict] = {}
+    seqs: dict[str, dict] = {}
+    for layout in ("dense", "paged"):
+        kw = dict(
+            arrival_rate=arrival_rate,
+            batch_size=dense_slots,
+            gen_len=gen_len,
+            decode_mode="cached",
+        )
+        if layout == "dense":
+            kw["num_slots"] = dense_slots
+        else:
+            kw.update(
+                cache_layout="paged",
+                block_size=block_size,
+                num_slots=paged_slots,
+                num_blocks=num_blocks,
+            )
+        eng.rng = np.random.default_rng(serve_seed)
+        eng.serve(prompts, **kw)  # warmup/compile
+        eng.rng = np.random.default_rng(serve_seed)
+        t0 = time.perf_counter()
+        stats = eng.serve(prompts, **kw)
+        wall = time.perf_counter() - t0
+        s = stats.summary()
+        seqs[layout] = stats.sequences_by_rid()
+        runs[layout] = {
+            "wall_s": wall,
+            "tokens_per_s": s["generated_tokens"] / wall,
+            "generated_tokens": s["generated_tokens"],
+            "num_completed": s["num_completed"],
+            "peak_in_flight": s["peak_in_flight"],
+            "mean_delay_s": s["mean_delay"],
+            "exit_histogram": s["exit_histogram"],
+            "kv_token_capacity_per_replica": (
+                dense_slots * max_len if layout == "dense" else num_blocks * block_size
+            ),
+            "prefix_hit_rate": s["prefix_hit_rate"],
+            "prefix_hit_blocks": s["prefix_hit_blocks"],
+            "prefix_total_blocks": s["prefix_total_blocks"],
+            "block_occupancy_mean": s["block_occupancy_mean"],
+            "block_occupancy_peak": s["block_occupancy_peak"],
+        }
+        print(
+            f"{layout:5s}: peak_in_flight {s['peak_in_flight']:3d}  "
+            f"tok/s {runs[layout]['tokens_per_s']:8.1f}  "
+            f"prefix_hits {s['prefix_hit_rate']*100:4.1f}%  "
+            f"occupancy peak {s['block_occupancy_peak']*100 if layout == 'paged' else float('nan'):5.1f}%"
+        )
+    identical = seqs["dense"] == seqs["paged"] == reference
+    token_bytes = _kv_token_bytes(eng.cfg, max_len)
+    inflight_gain = runs["paged"]["peak_in_flight"] / max(
+        runs["dense"]["peak_in_flight"], 1
+    )
+    print(
+        f"token-identical (paged == dense == monolithic): {identical}  "
+        f"in-flight gain at equal KV bytes: {inflight_gain:.2f}x"
+    )
+    return {
+        "workload": {
+            "n_requests": len(prompts),
+            "prompt_lens": sorted(int(p.shape[0]) for p in prompts),
+            "gen_len": gen_len,
+            "block_size": block_size,
+            "dense_slots": dense_slots,
+            "paged_slots": paged_slots,
+            "num_blocks_per_replica": num_blocks,
+            "max_len": max_len,
+            "kv_bytes_per_token_by_stage": token_bytes,
+            "kv_bytes_per_replica_by_stage": [
+                b * dense_slots * max_len for b in token_bytes
+            ],
+            "arrival_rate": arrival_rate,
+            "threshold": float(eng.thresholds[0]),
+        },
+        "by_layout": runs,
+        "tokens_identical": identical,
+        "in_flight_gain_at_equal_kv_bytes": inflight_gain,
+    }
+
+
+def validate_paged_schema(payload: dict) -> None:
+    """The contract the paged capacity bench is held to."""
+    assert "paged" in payload and "meta" in payload
+    res = payload["paged"]
+    assert res["tokens_identical"] is True, (
+        "paged decode diverged from the dense layout / monolithic reference"
+    )
+    dense, paged = res["by_layout"]["dense"], res["by_layout"]["paged"]
+    assert (
+        paged["kv_token_capacity_per_replica"]
+        <= dense["kv_token_capacity_per_replica"]
+    ), "paged run used MORE KV memory than dense"
+    assert res["in_flight_gain_at_equal_kv_bytes"] >= 2.0, (
+        f"paged layout sustained only "
+        f"{res['in_flight_gain_at_equal_kv_bytes']:.2f}x the dense in-flight "
+        "requests at equal KV bytes (need >= 2x)"
+    )
+    assert paged["prefix_hit_blocks"] > 0
+    assert 0.0 < paged["block_occupancy_peak"] <= 1.0
+
+
 def validate_schema(payload: dict) -> None:
     """The contract ``bench-smoke`` (CI) holds this benchmark to."""
     assert "decode" in payload and "meta" in payload
@@ -192,11 +361,52 @@ def main() -> None:
         help="Poisson arrival rate; high = closed-loop (all requests queued)",
     )
     ap.add_argument(
+        "--cache-layout",
+        choices=("dense", "paged"),
+        default="dense",
+        help="dense: cached-vs-stateless throughput (BENCH_decode.json); "
+        "paged: paged-vs-dense capacity at equal KV bytes (BENCH_paged.json)",
+    )
+    ap.add_argument(
+        "--block-size",
+        type=int,
+        default=16,
+        help="tokens per KV block for --cache-layout paged",
+    )
+    ap.add_argument(
         "--smoke",
         action="store_true",
         help="tiny workload; validate the JSON schema and exit nonzero on drift",
     )
     args = ap.parse_args()
+    meta = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+    }
+
+    if args.cache_layout == "paged":
+        if args.out == "BENCH_decode.json":
+            args.out = "BENCH_paged.json"
+        gen_len = 8 if args.smoke else 32
+        dense_slots = 2 if args.smoke else 4
+        groups = dict(n_groups=3, group=4, n_long=2) if args.smoke else {}
+        eng = build_engine(threshold=0.35)
+        res = bench_paged(
+            eng,
+            gen_len=gen_len,
+            block_size=args.block_size,
+            dense_slots=dense_slots,
+            arrival_rate=args.arrival_rate,
+            **groups,
+        )
+        payload = {"paged": res, "meta": meta}
+        validate_paged_schema(payload)
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {args.out}")
+        return
+
     if args.smoke:
         args.n_requests, args.prompt_len, args.gen_lens = 6, 8, [4]
         args.batch_size, args.num_slots, args.repeats = 4, 4, 1
@@ -212,14 +422,7 @@ def main() -> None:
         repeats=args.repeats,
         num_slots=args.num_slots,
     )
-    payload = {
-        "decode": res,
-        "meta": {
-            "jax": jax.__version__,
-            "backend": jax.default_backend(),
-            "platform": platform.platform(),
-        },
-    }
+    payload = {"decode": res, "meta": meta}
     validate_schema(payload)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

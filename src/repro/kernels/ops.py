@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import exit_confidence as _exit
 from repro.kernels import flash_attention as _flash
+from repro.kernels import paged_decode_attention as _paged
 from repro.kernels import ref
 
 Backend = Literal["auto", "pallas", "pallas_interpret", "xla"]
@@ -78,6 +79,37 @@ def decode_attention(
         return ref.decode_attention_ref(q, k, v, lengths)
     return _dec.decode_attention(
         q, k, v, lengths, block_k=block_k, interpret=(be == "pallas_interpret")
+    )
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    seq_len: int | None = None,
+) -> jnp.ndarray:
+    """Flash decode through a block table over a paged KV pool.
+
+    The xla path gathers the row's blocks into a contiguous virtual cache
+    sliced to ``seq_len`` — the exact shape of the dense slot path, so paged
+    and dense decode stay bitwise identical.  The Pallas path streams pool
+    blocks via scalar-prefetched table indices and never materializes the
+    gather.
+    """
+    be = get_backend()
+    if be == "xla":
+        return ref.paged_decode_attention_ref(
+            q, k_pool, v_pool, table, lengths, seq_len=seq_len
+        )
+    if seq_len is not None:
+        # the kernel masks by per-row lengths only; clamping reproduces the
+        # oracle's slice-to-seq_len semantics on every backend
+        lengths = jnp.minimum(lengths, seq_len)
+    return _paged.paged_decode_attention(
+        q, k_pool, v_pool, table, lengths, interpret=(be == "pallas_interpret")
     )
 
 

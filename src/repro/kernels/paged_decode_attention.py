@@ -1,0 +1,158 @@
+"""Pallas TPU flash-decode over a PAGED KV cache (vLLM-style block pool).
+
+Same online-softmax walk as ``repro.kernels.decode_attention``, but the KV
+cache is a physical block pool ``[num_blocks, block_size, kv_heads, hd]``
+addressed through a per-row block table ``[B, n_logical]`` instead of a
+contiguous ``[B, S, ...]`` arena.  The table rides in as a scalar-prefetch
+operand (SMEM before the body runs), so the k/v ``BlockSpec`` index maps can
+dereference it: grid step ``(b, h, j)`` DMAs physical block ``table[b, j]``
+straight from the pool — the virtual sequence is never materialized in HBM.
+
+  * grid = (batch, kv_heads, n_logical); last axis sequential, carrying the
+    (m, l, acc) scratch across the row's block walk.
+  * unallocated logical blocks point at the pool's trash row; their
+    positions are ``>= lengths[b]`` so the whole tile is skipped (masked and
+    ``pl.when``-gated, same as padded tail blocks in the dense kernel).
+  * one pool block per grid step: ``block_size`` should be a multiple of
+    the lane tiling (128) for peak DMA efficiency on real TPUs; tiny blocks
+    work but stream narrow tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    table_ref,  # SMEM [B, n_logical] i32 (scalar prefetch)
+    len_ref,  # SMEM [B] i32 (scalar prefetch)
+    q_ref,  # [1, G, hd]
+    k_ref,  # [1, block_size, 1, hd] — physical block table_ref[b, j]
+    v_ref,  # [1, block_size, 1, hd]
+    o_ref,  # [1, G, hd]
+    m_scr,  # [G, 128] f32
+    l_scr,  # [G, 128] f32
+    acc_scr,  # [G, hd] f32
+    *,
+    sm_scale: float,
+    block_size: int,
+    num_logical: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = j * block_size
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0]  # [G, hd]
+        k = k_ref[0, :, 0, :]  # [block_size, hd]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, block_size]
+        s = s * sm_scale
+        G = s.shape[0]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (G, block_size), 1)
+        mask = k_pos < length
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = jnp.broadcast_to(
+            l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape
+        )
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(j == num_logical - 1)
+    def _emit():
+        l = l_scr[:, :1]
+        o_ref[0] = (acc_scr[...] / jnp.where(l > 0.0, l, 1.0)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "interpret"))
+def paged_decode_attention(
+    q: jnp.ndarray,  # [B, Hq, hd]
+    k_pool: jnp.ndarray,  # [NB, bs, KVH, hd]
+    v_pool: jnp.ndarray,  # [NB, bs, KVH, hd]
+    table: jnp.ndarray,  # [B, n_logical] i32
+    lengths: jnp.ndarray,  # [B] i32 — valid prefix of each row
+    *,
+    sm_scale: float | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, hd = q.shape
+    bs, KVH = k_pool.shape[1], k_pool.shape[2]
+    if Hq % KVH != 0:
+        raise ValueError(f"q heads {Hq} not a multiple of kv heads {KVH}")
+    G = Hq // KVH
+    n_logical = table.shape[1]
+    if sm_scale is None:
+        sm_scale = float(1.0 / np.sqrt(hd))
+
+    # q regrouped so each kv head's G query heads are contiguous
+    q3 = q.reshape(B, KVH, G, hd).reshape(B, KVH * G, hd)
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        sm_scale=sm_scale,
+        block_size=bs,
+        num_logical=n_logical,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + lengths land in SMEM up front
+        grid=(B, KVH, n_logical),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, h, j, table_ref, len_ref: (b, h, 0)),
+            pl.BlockSpec(
+                (1, bs, 1, hd),
+                lambda b, h, j, table_ref, len_ref: (table_ref[b, j], 0, h, 0),
+            ),
+            pl.BlockSpec(
+                (1, bs, 1, hd),
+                lambda b, h, j, table_ref, len_ref: (table_ref[b, j], 0, h, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, G, hd), lambda b, h, j, table_ref, len_ref: (b, h, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, 128), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, hd), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q3, k_pool, v_pool)
+    return out.reshape(B, KVH, G, hd).reshape(B, Hq, hd)

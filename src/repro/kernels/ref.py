@@ -56,6 +56,32 @@ def decode_attention_ref(
     return out.reshape(B, Hq, hd)
 
 
+def paged_decode_attention_ref(
+    q: jnp.ndarray,  # [B, Hq, hd]
+    k_pool: jnp.ndarray,  # [NB, bs, kv, hd] physical block pool
+    v_pool: jnp.ndarray,  # [NB, bs, kv, hd]
+    table: jnp.ndarray,  # [B, n_logical] i32 — physical block per logical block
+    lengths: jnp.ndarray,  # [B] valid prefix length of each row
+    seq_len: int | None = None,
+) -> jnp.ndarray:
+    """Oracle: gather each row's blocks into a contiguous virtual cache and
+    run the dense decode reference on it.
+
+    ``seq_len`` truncates the virtual view (``n_logical * bs`` may overhang
+    the real max length); slicing there keeps the softmax reductions the
+    exact shape of the dense slot path, so paged decode is bitwise identical
+    to it.  Unallocated table entries may point anywhere valid (the trash
+    block) — those positions are >= ``lengths`` and masked.
+    """
+    B = q.shape[0]
+    k = k_pool[table].reshape(B, -1, *k_pool.shape[2:])
+    v = v_pool[table].reshape(B, -1, *v_pool.shape[2:])
+    if seq_len is not None:
+        k = k[:, :seq_len]
+        v = v[:, :seq_len]
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def exit_confidence_ref(h: jnp.ndarray, w: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """h: [B, d], w: [d, V] -> (top-1 softmax prob [B] f32, argmax [B] i32).
 

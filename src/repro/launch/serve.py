@@ -54,6 +54,30 @@ def main() -> None:
         default=None,
         help="cache slots per replica ring (default: 2 * batch size)",
     )
+    ap.add_argument(
+        "--cache-layout",
+        choices=("dense", "paged"),
+        default="dense",
+        help="slot-store memory layout: dense worst-case arenas, or paged "
+        "block pools with prompt-prefix sharing (token-identical outputs)",
+    )
+    ap.add_argument(
+        "--block-size",
+        type=int,
+        default=16,
+        help="tokens per KV block under --cache-layout paged",
+    )
+    ap.add_argument(
+        "--num-blocks",
+        type=int,
+        default=None,
+        help="KV blocks per replica pool (default: the dense footprint)",
+    )
+    ap.add_argument(
+        "--no-prefix-sharing",
+        action="store_true",
+        help="disable prompt-prefix block sharing under the paged layout",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -86,15 +110,26 @@ def main() -> None:
             gen_len=args.gen_len,
             decode_mode=args.decode_mode,
             num_slots=args.num_slots,
+            cache_layout=args.cache_layout,
+            block_size=args.block_size,
+            num_blocks=args.num_blocks,
+            prefix_sharing=not args.no_prefix_sharing,
         )
         s = stats.summary()
+        paged_info = (
+            f"  blocks {s['block_occupancy_peak']*100:.0f}% peak  "
+            f"prefix hits {s['prefix_hit_rate']*100:.0f}%"
+            if args.cache_layout == "paged"
+            else ""
+        )
         print(
             f"slot {slot}: {s['num_completed']} done  "
             f"{s['generated_tokens']} tokens  "
             f"mean_delay {s['mean_delay']*1e3:.1f}ms  "
             f"p95 {s['p95_delay']*1e3:.1f}ms  "
             f"padded waste {s['padded_row_frac']*100:.1f}%  "
-            f"exits {s['exit_histogram']}  thresholds {engine.thresholds}",
+            f"exits {s['exit_histogram']}  thresholds {engine.thresholds}"
+            f"{paged_info}",
             flush=True,
         )
         # dynamic environment: replicas throttle between slots (paper §4.3)

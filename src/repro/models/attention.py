@@ -275,6 +275,62 @@ def gqa_decode_ragged(
     return out, new_cache
 
 
+def _paged_token_write(
+    pool: jnp.ndarray,  # [NB, bs, ...] physical block pool
+    new: jnp.ndarray,  # [B, 1, ...] one token per row
+    table: jnp.ndarray,  # [B, n_logical] i32
+    pos: jnp.ndarray,  # [B] i32 — position the token lands at
+) -> jnp.ndarray:
+    """Scatter one token per row into the pool through the block table."""
+    bs = pool.shape[1]
+    logical = pos // bs
+    offset = pos % bs
+    phys = jnp.take_along_axis(table, logical[:, None], axis=1)[:, 0]  # [B]
+    return pool.at[phys, offset].set(new[:, 0].astype(pool.dtype))
+
+
+def gqa_decode_paged(
+    params: Params,
+    x: jnp.ndarray,  # [B, 1, d]
+    cache: Params,
+    dims: AttnDims,
+    seq_len: int,
+):
+    """One decode step against a PAGED slot store.
+
+    ``cache`` holds the physical block pool plus per-row indirection:
+    ``{"k"/"v": [NB, bs, kv, hd], "pos": i32 [B], "table": i32 [B, nlog]}``.
+    Same per-row ragged math as ``gqa_decode_ragged`` — rope positions, the
+    token write, and validity all keyed by ``pos`` — but reads and writes go
+    through the block table.  Attention runs through
+    ``kernels.ops.paged_decode_attention`` (scalar-prefetch Pallas kernel on
+    TPU; gather-to-``seq_len`` + dense oracle elsewhere, which keeps paged
+    decode bitwise identical to the dense slot path).  The engine guarantees
+    the block containing ``pos`` is exclusively owned (copy-on-write happens
+    at allocation time), so the write never touches a shared block.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    B = x.shape[0]
+    pos = cache["pos"]  # int32 [B]
+    table = cache["table"]  # int32 [B, n_logical]
+    q, k_new, v_new = _project_qkv(params, x, dims)
+    pos_b = pos[:, None]  # [B, 1]
+    q = apply_rope(q, pos_b, dims.rope_theta)
+    k_new = apply_rope(k_new, pos_b, dims.rope_theta)
+
+    new_cache = dict(cache)
+    new_cache["k"] = _paged_token_write(cache["k"], k_new, table, pos)
+    new_cache["v"] = _paged_token_write(cache["v"], v_new, table, pos)
+    new_cache["pos"] = pos + 1
+
+    out = kernel_ops.paged_decode_attention(
+        q[:, 0], new_cache["k"], new_cache["v"], table, pos + 1, seq_len=seq_len
+    )
+    out = matmul(out.reshape(B, 1, dims.q_dim), params["w_o"])
+    return out, new_cache
+
+
 def gqa_decode(
     params: Params,
     x: jnp.ndarray,  # [B, 1, d]
@@ -482,6 +538,36 @@ def mla_decode_ragged(params: Params, x: jnp.ndarray, cache: Params, dims: MlaDi
     out = _mla_absorbed_attend(
         params, q_nope, q_pe, new_cache["c_kv"], new_cache["k_pe"], pos, dims
     )
+    return out, new_cache
+
+
+def mla_decode_paged(
+    params: Params, x: jnp.ndarray, cache: Params, dims: MlaDims, seq_len: int
+):
+    """Absorbed MLA decode against a PAGED latent pool.
+
+    ``cache``: ``{"c_kv": [NB, bs, lora], "k_pe": [NB, bs, rope], "pos": [B],
+    "table": [B, nlog]}``.  The latent rows are gathered to a contiguous
+    ``seq_len`` view (the exact dense-slot shape, so the absorbed math is
+    bitwise identical to ``mla_decode_ragged``); writes go through the table.
+    """
+    B = x.shape[0]
+    pos = cache["pos"]  # int32 [B]
+    table = cache["table"]
+    pos_b = pos[:, None]
+    q_nope, q_pe = _mla_q(params, x, dims, pos_b)  # [B,1,H,*]
+    c_new, kpe_new = _mla_latent(params, x, dims, pos_b)
+
+    new_cache = dict(cache)
+    new_cache["c_kv"] = _paged_token_write(cache["c_kv"], c_new, table, pos)
+    new_cache["k_pe"] = _paged_token_write(cache["k_pe"], kpe_new, table, pos)
+    new_cache["pos"] = pos + 1
+
+    c_virt = new_cache["c_kv"][table].reshape(B, -1, dims.kv_lora_rank)[:, :seq_len]
+    kpe_virt = new_cache["k_pe"][table].reshape(B, -1, dims.qk_rope_head_dim)[
+        :, :seq_len
+    ]
+    out = _mla_absorbed_attend(params, q_nope, q_pe, c_virt, kpe_virt, pos, dims)
     return out, new_cache
 
 

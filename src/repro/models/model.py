@@ -274,14 +274,26 @@ def _block_decode(
     cache: Params,
     cfg: ArchConfig,
     ragged: bool = False,
+    paged_seq_len: int | None = None,
 ):
     """One-token block step.  ``ragged=True`` treats ``cache["pos"]`` as a
     per-row int32 [B] vector (the serving engine's slot-cache batches mix
     requests at different prefix lengths); SSM state steps are position-free,
-    so only the attention variants branch."""
+    so only the attention variants branch.  ``paged_seq_len`` selects the
+    paged-attention path: the cache carries a physical block pool plus a
+    per-row block ``table`` instead of contiguous rows (still ragged)."""
     if kind in ("attn", "dense_attn", "moe_attn"):
         h = layers.apply_norm(cfg.norm, p["norm1"], x)
-        if cfg.mla is not None:
+        if paged_seq_len is not None:
+            if cfg.mla is not None:
+                out, cache = attention.mla_decode_paged(
+                    p["attn"], h, cache, cfg.mla, paged_seq_len
+                )
+            else:
+                out, cache = attention.gqa_decode_paged(
+                    p["attn"], h, cache, cfg.attn_dims(), paged_seq_len
+                )
+        elif cfg.mla is not None:
             mla_fn = attention.mla_decode_ragged if ragged else attention.mla_decode
             out, cache = mla_fn(p["attn"], h, cache, cfg.mla)
         else:
@@ -350,7 +362,12 @@ def _run_stage(
 
 
 def _decode_stage(
-    stage: Params, x: jnp.ndarray, caches, cfg: ArchConfig, ragged: bool = False
+    stage: Params,
+    x: jnp.ndarray,
+    caches,
+    cfg: ArchConfig,
+    ragged: bool = False,
+    paged_seq_len: int | None = None,
 ):
     period = cfg.period
 
@@ -358,7 +375,9 @@ def _decode_stage(
         per_params, per_cache = inp
         new_caches = []
         for i, kind in enumerate(period):
-            x, nc = _block_decode(kind, per_params[i], x, per_cache[i], cfg, ragged)
+            x, nc = _block_decode(
+                kind, per_params[i], x, per_cache[i], cfg, ragged, paged_seq_len
+            )
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -397,21 +416,36 @@ def decode_stage_ragged(
     return _decode_stage(params["stages"][stage_idx - 1], x, caches, cfg, ragged=True)
 
 
+# cache leaves with a ``max_len`` sequence dimension — the only ones the
+# paged layout moves into the block pool; everything else (per-slot SSM
+# state, conv tails, positions) stays slot-indexed
+PAGED_CACHE_LEAVES = ("k", "v", "c_kv", "k_pe")
+
+
+def validate_slot_layout(cfg: ArchConfig, stage_idx: int, max_len: int) -> None:
+    """Reject configs the slot-resident cache layouts cannot represent, up
+    front and with an actionable message (not mid-tree-map)."""
+    if cfg.uses_attention and cfg.mla is None:
+        w = cfg.attn_dims().sliding_window
+        if w is not None and w < max_len:
+            raise ValueError(
+                f"stage {stage_idx} of config {cfg.name!r}: slot-resident "
+                f"caches need full attention caches, but sliding_window={w} "
+                f"< max_len={max_len}. Serve with max_len <= sliding_window, "
+                "set ArchConfig.sliding_window=None, or use the monolithic "
+                "decode path; per-slot window rings are a ROADMAP item."
+            )
+
+
 def init_stage_slot_caches(cfg: ArchConfig, stage_idx: int, num_slots: int, max_len: int):
-    """Zeroed slot-resident caches for one stage's replica.
+    """Zeroed slot-resident caches for one stage's replica (dense layout).
 
     Leaves are shaped ``[n_periods, num_slots, ...]`` with ``pos`` a per-slot
     int32 vector — each slot holds one request's stage-local cache row, so a
     decode batch can gather any subset of slots (continuous batching).
     Sliding-window ring caches are not representable per-slot yet.
     """
-    if cfg.uses_attention and cfg.mla is None:
-        dims = cfg.attn_dims()
-        if dims.sliding_window is not None and dims.sliding_window < max_len:
-            raise NotImplementedError(
-                "slot caches need full attention caches; sliding window "
-                f"{dims.sliding_window} < max_len {max_len}"
-            )
+    validate_slot_layout(cfg, stage_idx, max_len)
     n_periods = cfg.stage_periods()[stage_idx - 1]
     per_stage = []
     for kind in cfg.period:
@@ -422,6 +456,92 @@ def init_stage_slot_caches(cfg: ArchConfig, stage_idx: int, num_slots: int, max_
         )
         per_stage.append(stacked)
     return tuple(per_stage)
+
+
+def init_stage_paged_caches(
+    cfg: ArchConfig,
+    stage_idx: int,
+    num_slots: int,
+    num_blocks: int,
+    block_size: int,
+    max_len: int,
+):
+    """Zeroed PAGED caches for one stage's replica: ``(pool, state)``.
+
+    ``pool`` holds the sequence-dimension leaves (``k``/``v`` or MLA
+    ``c_kv``/``k_pe``) as physical block pools ``[n_periods, num_blocks,
+    block_size, ...]`` addressed through per-request block tables; ``state``
+    keeps everything per-slot (``pos`` plus any SSM state), shaped
+    ``[n_periods, num_slots, ...]`` exactly like the dense layout.  Both
+    counts INCLUDE their trailing trash row (padded batch rows write there).
+    """
+    validate_slot_layout(cfg, stage_idx, max_len)
+    n_periods = cfg.stage_periods()[stage_idx - 1]
+
+    def stack(d):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_periods,) + a.shape).copy(), d
+        )
+
+    pool_stage, state_stage = [], []
+    for kind in cfg.period:
+        if kind in ("attn", "dense_attn", "moe_attn"):
+            if cfg.mla is not None:
+                one = attention.make_mla_cache(num_blocks, block_size, cfg.mla)
+            else:
+                one = attention.make_kv_cache(num_blocks, block_size, cfg.attn_dims())
+            pool = {k: v for k, v in one.items() if k in PAGED_CACHE_LEAVES}
+            state = {}
+        else:
+            pool = {}
+            state = {
+                k: v
+                for k, v in _block_cache(kind, cfg, num_slots, max_len).items()
+                if k != "pos"
+            }
+        state["pos"] = jnp.zeros((num_slots,), jnp.int32)
+        pool_stage.append(stack(pool))
+        state_stage.append(stack(state))
+    return tuple(pool_stage), tuple(state_stage)
+
+
+def decode_stage_paged(
+    params: Params,
+    stage_idx: int,
+    x: jnp.ndarray,
+    pool_caches,
+    state_rows,
+    tables: jnp.ndarray,  # int32 [B, n_logical]
+    cfg: ArchConfig,
+    seq_len: int,
+):
+    """One token through stage ``stage_idx`` reading/writing the block pool
+    through per-row block tables.
+
+    ``pool_caches``: per-period pool dicts ``[n_periods, num_blocks, bs, ...]``
+    (updated in place, returned whole); ``state_rows``: the batch's gathered
+    per-slot rows ``[n_periods, B, ...]`` including ``pos``.  Returns
+    ``(x_out, new_caches)`` with each period's dict holding both the updated
+    pools and the updated batch rows.
+    """
+    n_periods = cfg.stage_periods()[stage_idx - 1]
+    caches = []
+    for pool_d, state_d in zip(pool_caches, state_rows):
+        c = dict(state_d)
+        c.update(pool_d)
+        if pool_d:  # attention kinds read through the table
+            c["table"] = jnp.broadcast_to(
+                tables[None], (n_periods,) + tables.shape
+            )
+        caches.append(c)
+    return _decode_stage(
+        params["stages"][stage_idx - 1],
+        x,
+        tuple(caches),
+        cfg,
+        ragged=True,
+        paged_seq_len=seq_len,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -8,11 +8,15 @@ from repro.serving.batching import (
     padded_batch_size,
 )
 from repro.serving.engine import CollaborativeEngine, ServeStats, StagePrograms
+from repro.serving.paging import AllocResult, AppendResult, BlockAllocator, blocks_for
 from repro.serving.steps import (
+    make_block_copy,
     make_decode_step,
     make_embed_step,
     make_exit_head_step,
     make_final_head_step,
+    make_paged_slot_write,
+    make_paged_stage_decode,
     make_prefill_step,
     make_slot_write,
     make_stage_decode,
@@ -25,9 +29,11 @@ from repro.serving.steps import (
 __all__ = [
     "FifoBatcher", "Request", "ShapeBucketBatcher", "SlotRing", "batch_tokens",
     "pad_tokens", "padded_batch_size",
+    "AllocResult", "AppendResult", "BlockAllocator", "blocks_for",
     "CollaborativeEngine", "ServeStats", "StagePrograms",
-    "make_decode_step", "make_embed_step", "make_exit_head_step",
-    "make_final_head_step", "make_prefill_step", "make_slot_write",
+    "make_block_copy", "make_decode_step", "make_embed_step",
+    "make_exit_head_step", "make_final_head_step", "make_paged_slot_write",
+    "make_paged_stage_decode", "make_prefill_step", "make_slot_write",
     "make_stage_decode", "make_stage_forward", "make_stage_prefill",
     "monolithic_generate", "select_exit",
 ]

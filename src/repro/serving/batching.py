@@ -44,6 +44,8 @@ class Request:
     path: dict = dataclasses.field(default_factory=dict)
     # stage-local cache residency: node -> slot index in that replica's ring
     slots: dict = dataclasses.field(default_factory=dict)
+    # paged layout: node -> BlockAllocator sequence handle at that replica
+    block_seq: dict = dataclasses.field(default_factory=dict)
 
     @property
     def delay(self) -> float:
@@ -113,6 +115,16 @@ class ShapeBucketBatcher:
         """Push sequence number of the longest-waiting request, or None."""
         heads = [s[0] for s in self._seqs.values() if s]
         return min(heads) if heads else None
+
+    def peek(self) -> tuple[Hashable, Request] | None:
+        """(bucket key, head request) the next ``pop_batch`` would serve —
+        lets the engine size ``max_take`` (e.g. to free cache blocks) before
+        committing to the pop."""
+        heads = [(s[0], k) for k, s in self._seqs.items() if s]
+        if not heads:
+            return None
+        _, key = min(heads)
+        return key, self.buckets[key].queue[0]
 
     def pop_batch(
         self, max_take: int | None = None

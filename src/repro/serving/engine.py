@@ -77,6 +77,7 @@ from repro.serving.batching import (
     batch_tokens,
     padded_batch_size,
 )
+from repro.serving.paging import BlockAllocator
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +105,9 @@ class StagePrograms:
         self._prefill = {}
         self._decode = {}
         self._slot_write = {}
+        self._paged_decode = {}
+        self._paged_write = {}
+        self._block_copy = {}
 
     def embed(self, tokens: jnp.ndarray) -> jnp.ndarray:
         return self._embed(self.params, tokens)
@@ -135,6 +139,35 @@ class StagePrograms:
     def init_slot_caches(self, stage_idx: int, num_slots: int, max_len: int):
         return model_lib.init_stage_slot_caches(self.cfg, stage_idx, num_slots, max_len)
 
+    # -- paged layout -------------------------------------------------------
+    def init_paged_slot_caches(
+        self, stage_idx: int, num_slots: int, num_blocks: int, block_size: int,
+        max_len: int,
+    ):
+        return model_lib.init_stage_paged_caches(
+            self.cfg, stage_idx, num_slots, num_blocks, block_size, max_len
+        )
+
+    def paged_slot_write(self, stage_idx, pool, state, new_caches, wtab, slots):
+        if stage_idx not in self._paged_write:
+            self._paged_write[stage_idx] = steps.make_paged_slot_write(
+                self.cfg, stage_idx
+            )
+        return self._paged_write[stage_idx](pool, state, new_caches, wtab, slots)
+
+    def paged_stage_decode(self, stage_idx, x, pool, state, tables, slots, seq_len):
+        key = (stage_idx, seq_len)
+        if key not in self._paged_decode:
+            self._paged_decode[key] = steps.make_paged_stage_decode(
+                self.cfg, stage_idx, seq_len
+            )
+        return self._paged_decode[key](self.params, x, pool, state, tables, slots)
+
+    def block_copy(self, stage_idx, pool, src, dst):
+        if stage_idx not in self._block_copy:
+            self._block_copy[stage_idx] = steps.make_block_copy(self.cfg, stage_idx)
+        return self._block_copy[stage_idx](pool, src, dst)
+
     def exit_head(self, stage_idx: int, x_last: jnp.ndarray):
         """(confidence, token) of the exit branch after stage ``stage_idx``."""
         if stage_idx not in self._exit:
@@ -164,6 +197,13 @@ class ServeStats:
     num_batches: int = 0
     num_forward_rows: int = 0  # padded rows pushed through stage forwards
     num_real_rows: int = 0  # live rows among them (the rest is padding waste)
+    # in-flight pressure: live (admitted, unretired) requests over time
+    peak_in_flight: int = 0
+    # paged layout: prompt blocks served from the prefix map vs allocated,
+    # and pool occupancy sampled at every paged batch (per replica)
+    prefix_hit_blocks: int = 0
+    prefix_total_blocks: int = 0
+    block_occupancy: list = dataclasses.field(default_factory=list)
 
     def summary(self) -> dict:
         d = np.asarray(self.delays)
@@ -192,6 +232,25 @@ class ServeStats:
             "generated_tokens": total_tokens,
             "sim_tokens_per_s": (
                 total_tokens / makespan if makespan and makespan > 0 else float("nan")
+            ),
+            "peak_in_flight": self.peak_in_flight,
+            # paged-layout memory stats (zeros/nan under the dense layout)
+            "prefix_hit_blocks": self.prefix_hit_blocks,
+            "prefix_total_blocks": self.prefix_total_blocks,
+            "prefix_hit_rate": (
+                self.prefix_hit_blocks / self.prefix_total_blocks
+                if self.prefix_total_blocks
+                else 0.0
+            ),
+            "block_occupancy_mean": (
+                float(np.mean(self.block_occupancy))
+                if self.block_occupancy
+                else float("nan")
+            ),
+            "block_occupancy_peak": (
+                float(np.max(self.block_occupancy))
+                if self.block_occupancy
+                else float("nan")
             ),
         }
 
@@ -308,6 +367,10 @@ class CollaborativeEngine:
         gen_len: int = 1,
         decode_mode: str | None = None,
         num_slots: int | None = None,
+        cache_layout: str = "dense",
+        block_size: int = 16,
+        num_blocks: int | None = None,
+        prefix_sharing: bool = True,
     ) -> ServeStats:
         """Serve ``prompts`` arriving as a Poisson stream.
 
@@ -331,15 +394,37 @@ class CollaborativeEngine:
         Both modes emit token-identical sequences and exit decisions for
         expanded-attention configs (see the module docstring for the MLA
         absorbed-decode caveat).
+
+        ``cache_layout`` picks the slot-store memory layout for cached mode:
+
+          * ``"dense"`` — each slot reserves a worst-case ``max_len`` KV
+            arena (the bitwise reference baseline).
+          * ``"paged"`` — KV lives in a per-replica pool of ``block_size``-
+            token blocks (``num_blocks`` of them; default: the dense
+            footprint) addressed through per-request block tables, allocated
+            lazily as generations grow.  Identical prompt-prefix blocks are
+            shared across requests (``prefix_sharing``) with copy-on-write,
+            so a replica holds several times more in-flight requests in the
+            same KV bytes.  Emitted tokens and exits are bitwise identical
+            to the dense layout; admission additionally waits for pool
+            blocks, and a serve whose pool is too small for its working set
+            raises instead of deadlocking silently.
         """
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
         if gen_len < 1:
             raise ValueError("gen_len must be >= 1")
+        if cache_layout not in ("dense", "paged"):
+            raise ValueError("cache_layout must be 'dense' or 'paged'")
+        paged = cache_layout == "paged"
         if decode_mode is None:
-            decode_mode = "cached" if gen_len > 1 else "stateless"
+            decode_mode = "cached" if (gen_len > 1 or paged) else "stateless"
         if decode_mode not in ("cached", "stateless"):
             raise ValueError("decode_mode must be 'cached' or 'stateless'")
+        if paged and decode_mode != "cached":
+            raise ValueError("cache_layout='paged' requires decode_mode='cached'")
+        if paged and block_size < 1:
+            raise ValueError("block_size must be >= 1")
         cached = decode_mode == "cached"
         if gen_len > 1 and self.cfg.frontend != "tokens":
             raise ValueError("autoregressive decode needs a token frontend")
@@ -384,18 +469,55 @@ class CollaborativeEngine:
         decode_q: dict[int, deque] = {v: deque() for v in es_nodes}
         rings: dict[int, SlotRing] = {}
         slot_store: dict[int, Any] = {}
+        pool_store: dict[int, Any] = {}
+        state_store: dict[int, Any] = {}
+        allocators: dict[int, BlockAllocator] = {}
         trash = -1
+        trash_block = -1
+        n_logical = 0
         max_len = max((int(p.shape[0]) for p in prompts), default=1) + gen_len
         if cached:
             n_slots = num_slots if num_slots is not None else max(2 * batch_size, 4)
             trash = n_slots  # extra store row absorbing padded-row writes
-            for v in es_nodes:
-                rings[v] = SlotRing(n_slots)
-                slot_store[v] = programs.init_slot_caches(
-                    int(topo.node_stage[v]), n_slots + 1, max_len
+            if paged:
+                n_logical = -(-max_len // block_size)
+                # default pool: the dense layout's footprint, block-granular
+                n_blocks = (
+                    num_blocks if num_blocks is not None else n_slots * n_logical
                 )
+                trash_block = n_blocks  # extra pool row absorbing trash writes
+                for v in es_nodes:
+                    rings[v] = SlotRing(n_slots)
+                    allocators[v] = BlockAllocator(
+                        n_blocks, block_size, prefix_sharing=prefix_sharing
+                    )
+                    pool_store[v], state_store[v] = programs.init_paged_slot_caches(
+                        int(topo.node_stage[v]),
+                        n_slots + 1,
+                        n_blocks + 1,
+                        block_size,
+                        max_len,
+                    )
+            else:
+                for v in es_nodes:
+                    rings[v] = SlotRing(n_slots)
+                    slot_store[v] = programs.init_slot_caches(
+                        int(topo.node_stage[v]), n_slots + 1, max_len
+                    )
+        live_reqs = 0  # admitted somewhere, not yet retired
+        # paged admission reserves each row's worst-case REMAINING blocks
+        # (it can still write up to prompt + gen_len - 1 positions), so a
+        # live row's decode appends can never starve — deadlock-freedom
+        # without preemption.  The occupancy win over dense comes from
+        # reserving each request's OWN worst case instead of max_len, plus
+        # prefix sharing keeping actual allocation below the reservation.
+        reserved = {v: 0 for v in es_nodes} if paged else {}
+
+        def total_blocks(prompt_len: int) -> int:
+            return -(-(prompt_len + gen_len - 1) // block_size)
 
         def run_prefill(node: int, reqs: list[Request], now: float) -> None:
+            nonlocal live_reqs
             h = int(topo.node_stage[node])
             # stateless decode passes run at a FIXED padded length: causal
             # masking makes the pad rows inert, the valid rows stay bitwise
@@ -410,11 +532,40 @@ class CollaborativeEngine:
                 for i, r in enumerate(reqs):
                     s = rings[node].alloc()
                     assert s is not None, "dispatch admitted beyond ring capacity"
+                    if not r.slots:  # first residency anywhere: now in flight
+                        live_reqs += 1
+                        stats.peak_in_flight = max(stats.peak_in_flight, live_reqs)
                     r.slots[node] = s
                     slots[i] = s
-                slot_store[node] = programs.slot_write(
-                    h, slot_store[node], caches, slots
-                )
+                if paged:
+                    alloc = allocators[node]
+                    wtab = np.full(
+                        (int(x.shape[0]), n_logical), trash_block, np.int32
+                    )
+                    for i, r in enumerate(reqs):
+                        res = alloc.alloc(r.tokens.tolist())
+                        assert res is not None, (
+                            "dispatch admitted beyond block-pool capacity"
+                        )
+                        r.block_seq[node] = res.handle
+                        reserved[node] += total_blocks(r.prompt_len) - len(res.table)
+                        for j, (blk, shared) in enumerate(
+                            zip(res.table, res.shared)
+                        ):
+                            # shared blocks already hold this prefix — never
+                            # rewrite them (other rows read them); redirect
+                            # the write to the trash block
+                            wtab[i, j] = trash_block if shared else blk
+                        stats.prefix_hit_blocks += sum(res.shared)
+                        stats.prefix_total_blocks += len(res.table)
+                    pool_store[node], state_store[node] = programs.paged_slot_write(
+                        h, pool_store[node], state_store[node], caches, wtab, slots
+                    )
+                    stats.block_occupancy.append(alloc.used_fraction)
+                else:
+                    slot_store[node] = programs.slot_write(
+                        h, slot_store[node], caches, slots
+                    )
             else:
                 x = programs.run_stage(h, x_in)
             last = (
@@ -439,9 +590,37 @@ class CollaborativeEngine:
                 if Bp > B:
                     hs.append(np.zeros((Bp - B,) + hs[0].shape[1:], hs[0].dtype))
                 x_in = np.concatenate(hs, axis=0) if len(hs) > 1 else hs[0]
-            x, slot_store[node] = programs.stage_decode(
-                h, x_in, slot_store[node], slots
-            )
+            if paged:
+                alloc = allocators[node]
+                rtab = np.full((Bp, n_logical), trash_block, np.int32)
+                for i, r in enumerate(reqs):
+                    # grow the row by one position (dispatch budgeted this);
+                    # crossing a block boundary takes a fresh pool block, and
+                    # a fork-shared target block is copied before the write
+                    res = alloc.append(r.block_seq[node])
+                    assert res is not None, (
+                        "dispatch scheduled a decode row beyond pool capacity"
+                    )
+                    if res.new_block:
+                        reserved[node] -= 1  # consumed part of the reservation
+                    # the engine never forks and shares only full blocks
+                    # strictly inside the prompt, while appends target
+                    # pos >= prompt_len — so copy-on-write cannot trigger
+                    # here (a reachable COW would also need charging against
+                    # ``reserved``; see programs.block_copy for the device
+                    # half when preemption/fork lands)
+                    assert res.cow is None, "append hit a shared block"
+                    tab = alloc.table(r.block_seq[node])
+                    rtab[i, : len(tab)] = tab
+                x, pool_store[node], state_store[node] = programs.paged_stage_decode(
+                    h, x_in, pool_store[node], state_store[node], rtab, slots,
+                    max_len,
+                )
+                stats.block_occupancy.append(alloc.used_fraction)
+            else:
+                x, slot_store[node] = programs.stage_decode(
+                    h, x_in, slot_store[node], slots
+                )
             finish_pass(node, reqs, x, now, h, is_decode_pass=True)
 
         def finish_pass(
@@ -505,17 +684,51 @@ class CollaborativeEngine:
             if now < busy_until[node]:
                 return
             ph = pending[node].head_seq()
+            prompt_blocks = 0
             if ph is not None and cached and rings[node].available == 0:
                 ph = None  # admission blocked until a retirement frees a slot
+            if ph is not None and paged:
+                # admission also waits for pool blocks: each admitted row
+                # reserves its sharing-blind worst-case TOTAL (prompt +
+                # generation), so in-flight decode appends can never starve
+                _, head = pending[node].peek()
+                prompt_blocks = total_blocks(head.prompt_len)
+                if allocators[node].free_blocks - reserved[node] < prompt_blocks:
+                    ph = None
             dq = decode_q[node]
-            dh = dq[0][0] if dq else None
+            if paged and dq:
+                # take FIFO decode rows whose next-position block needs fit
+                # the pool right now; rows that can't extend wait without
+                # masking runnable work behind them
+                budget = allocators[node].free_blocks
+                take: list = []
+                rest: list = []
+                for item in dq:
+                    cost = allocators[node].append_cost(item[1].block_seq[node])
+                    if len(take) < batch_size and cost <= budget:
+                        take.append(item)
+                        budget -= cost
+                    else:
+                        rest.append(item)
+                dh = take[0][0] if take else None
+            else:
+                take = rest = []
+                dh = dq[0][0] if dq else None
             if ph is None and dh is None:
                 return
             if dh is not None and (ph is None or dh < ph):
-                reqs = [dq.popleft()[1] for _ in range(min(batch_size, len(dq)))]
+                if paged:
+                    dq.clear()
+                    dq.extend(rest)
+                    reqs = [r for _, r in take]
+                else:
+                    reqs = [dq.popleft()[1] for _ in range(min(batch_size, len(dq)))]
                 run_decode(node, reqs, now)
                 return
             max_take = rings[node].available if cached else None
+            if paged:
+                headroom = allocators[node].free_blocks - reserved[node]
+                max_take = min(max_take, headroom // max(prompt_blocks, 1))
             popped = pending[node].pop_batch(max_take)
             if popped is None:
                 return
@@ -541,6 +754,7 @@ class CollaborativeEngine:
             dispatch(node, now)
 
         def finish(req: Request, done: float, c: float, h: int) -> None:
+            nonlocal live_reqs
             req.exited, req.exit_stage = True, h
             req.confidence, req.output_token = c, req.generated[-1]
             req.t_done = done
@@ -553,13 +767,25 @@ class CollaborativeEngine:
             stats.arrivals.append(req.arrival)
             stats.dones.append(done)
             if cached and req.slots:
+                live_reqs -= 1
                 freed = list(req.slots.items())
                 req.slots = {}
                 for v, s in freed:
                     rings[v].free(s)
+                if paged:
+                    for v, handle in req.block_seq.items():
+                        # release the unused tail of the worst-case reservation
+                        reserved[v] -= total_blocks(req.prompt_len) - len(
+                            allocators[v].table(handle)
+                        )
+                        allocators[v].free(handle)
+                    req.block_seq = {}
                 for v, _ in freed:
-                    # a freed slot can unblock admission-waiting prompts
-                    if pending[v].head_seq() is not None:
+                    # a freed slot/block can unblock admission-waiting
+                    # prompts and pool-starved decode rows
+                    if pending[v].head_seq() is not None or (
+                        paged and decode_q[v]
+                    ):
                         dispatch(v, done)
 
         for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
@@ -614,4 +840,18 @@ class CollaborativeEngine:
                 heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, nxt)))
             dispatch(node, now)
 
+        if len(stats.delays) != n:
+            # a stall is resource starvation no future event can clear —
+            # fail loudly rather than silently drop requests
+            hint = (
+                "the KV block pool cannot cover the in-flight working set — "
+                "raise num_blocks, shrink num_slots, or use "
+                "cache_layout='dense'"
+                if paged
+                else "requests were left queued with no runnable work"
+            )
+            raise RuntimeError(
+                f"serve stalled with {n - len(stats.delays)} of {n} requests "
+                f"unfinished; {hint}"
+            )
         return stats

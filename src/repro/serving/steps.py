@@ -147,6 +147,91 @@ def make_stage_decode(cfg: ArchConfig, stage_idx: int):
     return stage_decode
 
 
+def make_paged_slot_write(cfg: ArchConfig, stage_idx: int):
+    """Scatter a prefill batch's cache rows into the PAGED slot store.
+
+    ``wtab`` is int32 [B, n_logical] — each row's WRITE table: the physical
+    pool block per logical block, with prefix-shared blocks (already filled,
+    possibly read by other rows) and blocks past the prompt redirected to the
+    pool's trash block; padded rows are all-trash.  Sequence-dim cache leaves
+    are reshaped to block granularity and scattered through ``wtab``;
+    per-slot leaves (``pos`` + SSM state) scatter at ``slots`` exactly like
+    the dense layout.  Both stores are donated.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def paged_write(pool_stage, state_stage, new_caches, wtab, slots):
+        new_pool, new_state = [], []
+        flat_tab = wtab.reshape(-1)  # [B * n_logical]
+        for pool_d, state_d, new_d in zip(pool_stage, state_stage, new_caches):
+            pd = {}
+            for key, buf in pool_d.items():
+                new = new_d[key]  # [P, B, max_len, ...]
+                P, B, L = new.shape[0], new.shape[1], new.shape[2]
+                bs = buf.shape[2]
+                pad = wtab.shape[1] * bs - L
+                if pad:
+                    new = jnp.pad(
+                        new, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (new.ndim - 3)
+                    )
+                new = new.reshape((P, B * wtab.shape[1], bs) + new.shape[3:])
+                pd[key] = buf.at[:, flat_tab].set(new.astype(buf.dtype))
+            sd = {}
+            for key, buf in state_d.items():
+                new = new_d[key]
+                # "pos" comes out of prefill as one scalar per period ([P])
+                if new.ndim < buf.ndim:
+                    new = new[..., None]
+                sd[key] = buf.at[:, slots].set(new.astype(buf.dtype))
+            new_pool.append(pd)
+            new_state.append(sd)
+        return tuple(new_pool), tuple(new_state)
+
+    return paged_write
+
+
+def make_paged_stage_decode(cfg: ArchConfig, stage_idx: int, seq_len: int):
+    """One cached decode token per row against the replica's PAGED store.
+
+    ``tables`` int32 [B, n_logical] maps each row's logical blocks to pool
+    rows (unallocated entries point at the trash block); ``slots`` int32 [B]
+    names each row's per-slot state row.  Gathers the state rows, runs the
+    ragged decode reading/writing KV through the block tables
+    (``kernels.ops.paged_decode_attention``), scatters the state rows back,
+    and returns the stage output.  The pool and state stores are donated.
+    """
+
+    @functools.partial(jax.jit, donate_argnums=(2, 3))
+    def stage_decode(params, x, pool_stage, state_stage, tables, slots):
+        rows = jax.tree.map(lambda a: jnp.take(a, slots, axis=1), state_stage)
+        x_out, new_caches = model_lib.decode_stage_paged(
+            params, stage_idx, x, pool_stage, rows, tables, cfg, seq_len
+        )
+        new_pool, new_state = [], []
+        for pool_d, state_d, new_d in zip(pool_stage, state_stage, new_caches):
+            new_pool.append({k: new_d[k] for k in pool_d})
+            sd = {}
+            for k, buf in state_d.items():
+                sd[k] = buf.at[:, slots].set(new_d[k].astype(buf.dtype))
+            new_state.append(sd)
+        return x_out, tuple(new_pool), tuple(new_state)
+
+    return stage_decode
+
+
+def make_block_copy(cfg: ArchConfig, stage_idx: int):
+    """Copy pool blocks ``src -> dst`` (int32 [n] each) across every
+    sequence-dim leaf — the device half of allocator copy-on-write."""
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def block_copy(pool_stage, src, dst):
+        return jax.tree.map(
+            lambda buf: buf.at[:, dst].set(buf[:, src]), pool_stage
+        )
+
+    return block_copy
+
+
 def select_exit(
     next_token: jnp.ndarray,  # [B] final-head tokens
     exit_conf: jnp.ndarray,  # [B, n_exits]

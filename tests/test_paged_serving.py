@@ -1,0 +1,322 @@
+"""Differential suite for the PAGED slot-cache layout.
+
+Cache-layout bugs are silent — a wrong block-table entry yields wrong
+tokens, not crashes — so the paged data plane is held to bitwise equality
+against two independent references on the same workload:
+
+  * the dense slot layout (worst-case ``max_len`` arenas), and
+  * the monolithic ``model.prefill`` + ``model.decode_step`` generator,
+
+across block sizes (1, 3, 16), prefix sharing on/off, tight pools, and
+randomized admission/retirement schedules.  Also covers the slot-layout
+validation regression and the FifoBatcher / slot-ring edge cases.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.profiles import profile_from_arch
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import NetworkSpec, build_edge_network
+from repro.core.types import DtoHyperParams
+from repro.models import model as model_lib
+from repro.serving import CollaborativeEngine, FifoBatcher, Request, monolithic_generate
+
+GEN = 6
+THRESHOLD = 0.35  # mixes early exits (mid-batch retirement) with full runs
+
+
+def _build_engine(arch: str = "stablelm-1.6b", seed: int = 0, **reduced):
+    cfg = get_config(arch).reduced(**reduced)
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    profile = profile_from_arch(cfg)
+    topo = build_edge_network(
+        seed=seed, profile=profile, spec=NetworkSpec(num_eds=4, es_per_stage=(2, 2))
+    )
+    ep = synthetic_validation(seed=1, profile=profile)
+    eng = CollaborativeEngine(
+        params, cfg, topo, profile, ep, DtoHyperParams(rounds=20), seed=seed
+    )
+    eng.configuration_phase()
+    eng.state.thresholds = np.full_like(eng.state.thresholds, THRESHOLD)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def engine():
+    # small-but-real staged GQA model (the bench's shape)
+    return _build_engine(
+        vocab_size=128, d_model=64, d_ff=128, num_heads=2, num_kv_heads=2,
+        head_dim=32,
+    )
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    """Mixed lengths INCLUDING a shared 16-token prefix group — short
+    prompts waste most of a dense arena (the memory paging reclaims) and the
+    shared group exercises the prefix map."""
+    rng = np.random.default_rng(2)
+    common = rng.integers(0, 128, size=16).astype(np.int32)
+    own = [
+        np.concatenate([common, rng.integers(0, 128, size=n).astype(np.int32)])
+        for n in (3, 5, 3)
+    ]
+    loose = [
+        rng.integers(0, 128, size=length).astype(np.int32)
+        for length in (24, 7, 12, 7, 18)
+    ]
+    return own + loose
+
+
+@pytest.fixture(scope="module")
+def reference(engine, prompts):
+    """Monolithic single-host ground truth, per request."""
+    return {
+        i: (stage, tuple(toks))
+        for i, p in enumerate(prompts)
+        for toks, stage in [
+            monolithic_generate(
+                engine.programs.params, engine.cfg, p, engine.thresholds, GEN
+            )
+        ]
+    }
+
+
+def _serve(engine, prompts, seed=7, arrival_rate=1e5, batch_size=4, **kw):
+    engine.rng = np.random.default_rng(seed)
+    return engine.serve(
+        prompts, arrival_rate=arrival_rate, batch_size=batch_size, gen_len=GEN, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# bitwise differential: paged == dense == monolithic
+# ---------------------------------------------------------------------------
+
+
+def test_dense_reference_matches_monolithic(engine, prompts, reference):
+    stats = _serve(engine, prompts, decode_mode="cached")
+    assert stats.sequences_by_rid() == reference
+
+
+@pytest.mark.parametrize("block_size", [1, 3, 16])
+@pytest.mark.parametrize("prefix_sharing", [True, False])
+def test_paged_decode_bitwise_matches_references(
+    engine, prompts, reference, block_size, prefix_sharing
+):
+    stats = _serve(
+        engine,
+        prompts,
+        cache_layout="paged",
+        block_size=block_size,
+        prefix_sharing=prefix_sharing,
+    )
+    assert stats.sequences_by_rid() == reference
+    assert len(stats.delays) == len(prompts)
+    s = stats.summary()
+    assert 0.0 < s["block_occupancy_peak"] <= 1.0
+    if not prefix_sharing:
+        assert s["prefix_hit_blocks"] == 0
+
+
+@pytest.mark.parametrize(
+    "seed,arrival_rate,num_slots",
+    [(3, 40.0, 2), (11, 200.0, 3), (23, 1e5, 2)],
+)
+def test_paged_randomized_admission_retirement_schedules(
+    engine, prompts, reference, seed, arrival_rate, num_slots
+):
+    """Random arrival processes against tiny slot rings: admission blocks on
+    occupied slots, early exits retire rows mid-batch, freed slots re-admit
+    waiting prompts — tokens must never change."""
+    stats = _serve(
+        engine,
+        prompts,
+        seed=seed,
+        arrival_rate=arrival_rate,
+        num_slots=num_slots,
+        cache_layout="paged",
+        block_size=3,
+    )
+    assert stats.sequences_by_rid() == reference
+
+
+def test_paged_tight_pool_still_exact(engine, prompts, reference):
+    """A pool far below the dense footprint (which would be
+    num_slots * ceil(max_len / bs) = 4 * 8 blocks per replica) forces
+    admission to wait on block frees; outputs must be unchanged."""
+    stats = _serve(
+        engine,
+        prompts,
+        cache_layout="paged",
+        block_size=4,
+        num_slots=4,
+        num_blocks=16,
+    )
+    assert stats.sequences_by_rid() == reference
+    assert stats.summary()["block_occupancy_peak"] <= 1.0
+
+
+def test_paged_pool_too_small_raises_instead_of_stalling(engine, prompts):
+    """A pool that cannot cover even one request's full generation must fail
+    loudly, not hang or silently drop requests."""
+    with pytest.raises(RuntimeError, match="block pool"):
+        _serve(
+            engine,
+            prompts,
+            cache_layout="paged",
+            block_size=4,
+            num_slots=2,
+            num_blocks=4,
+        )
+
+
+def test_prefix_sharing_hits_and_shares_only_real_prefixes(
+    engine, prompts, reference
+):
+    """The shared-prefix prompt group must produce prefix-map hits; block
+    occupancy must not exceed the sharing-off run; outputs identical."""
+    on = _serve(engine, prompts, cache_layout="paged", block_size=4)
+    off = _serve(
+        engine, prompts, cache_layout="paged", block_size=4, prefix_sharing=False
+    )
+    assert on.sequences_by_rid() == reference
+    assert off.sequences_by_rid() == reference
+    assert on.prefix_hit_blocks > 0
+    assert off.prefix_hit_blocks == 0
+    assert (
+        on.summary()["block_occupancy_peak"] <= off.summary()["block_occupancy_peak"]
+    )
+
+
+def test_paged_mla_config_matches_dense():
+    """Absorbed-latent MLA decode through block tables == dense slot rows."""
+    eng = _build_engine("deepseek-v2-lite-16b", vocab_size=64)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 64, size=n).astype(np.int32) for n in (9, 5, 9)]
+    dense = _serve(eng, prompts, batch_size=2)
+    paged = _serve(eng, prompts, batch_size=2, cache_layout="paged", block_size=3)
+    assert paged.sequences_by_rid() == dense.sequences_by_rid()
+    assert len(paged.delays) == len(prompts)
+
+
+def test_paged_rejects_stateless_mode(engine, prompts):
+    with pytest.raises(ValueError, match="paged"):
+        _serve(engine, prompts, cache_layout="paged", decode_mode="stateless")
+    with pytest.raises(ValueError, match="cache_layout"):
+        _serve(engine, prompts, cache_layout="blocked")
+
+
+def test_block_copy_program_copies_every_pool_leaf(engine):
+    """make_block_copy — the device half of allocator copy-on-write (unused
+    by serve() today: engine sharing can never put an append into a shared
+    block; kept for the preemption/fork follow-on)."""
+    from repro.serving import steps
+
+    cfg = engine.cfg
+    pool, _ = model_lib.init_stage_paged_caches(
+        cfg, 1, num_slots=2, num_blocks=4, block_size=4, max_len=8
+    )
+    rng = np.random.default_rng(0)
+    pool = jax.tree.map(
+        lambda a: jnp.asarray(rng.standard_normal(a.shape), a.dtype), pool
+    )
+    before = jax.tree.map(lambda a: np.asarray(a).copy(), pool)
+    copy = steps.make_block_copy(cfg, 1)
+    src = jnp.asarray([0, 2], jnp.int32)
+    dst = jnp.asarray([3, 1], jnp.int32)
+    out = copy(pool, src, dst)
+    for d_new, d_old in zip(out, before):
+        for key in d_old:
+            new = np.asarray(d_new[key])
+            np.testing.assert_array_equal(new[:, 3], d_old[key][:, 0])
+            np.testing.assert_array_equal(new[:, 1], d_old[key][:, 2])
+            np.testing.assert_array_equal(new[:, 0], d_old[key][:, 0])
+
+
+# ---------------------------------------------------------------------------
+# slot-layout validation (regression: actionable error, not mid-tree-map)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("init", ["dense", "paged"])
+def test_sliding_window_slot_cache_error_is_actionable(init):
+    """Window < max_len configs must be rejected up front by BOTH slot
+    layouts with a ValueError naming the stage and the config field."""
+    cfg = get_config("mixtral-8x7b").reduced(vocab_size=64)
+    assert cfg.sliding_window is not None
+    with pytest.raises(ValueError, match=r"stage 2 .*sliding_window=32"):
+        if init == "dense":
+            model_lib.init_stage_slot_caches(cfg, 2, 4, max_len=64)
+        else:
+            model_lib.init_stage_paged_caches(cfg, 2, 4, 8, 16, max_len=64)
+    # window >= max_len is representable and must stay allowed
+    model_lib.init_stage_slot_caches(cfg, 2, 2, max_len=cfg.sliding_window)
+
+
+# ---------------------------------------------------------------------------
+# FifoBatcher / slot-ring edge cases (PR 2 gaps)
+# ---------------------------------------------------------------------------
+
+
+def _req(rid):
+    return Request(rid=rid, tokens=np.arange(3, dtype=np.int32), arrival=float(rid))
+
+
+def test_fifo_batcher_drains_partial_and_respects_max_batches():
+    b = FifoBatcher(batch_size=4)
+    for rid in range(10):
+        b.push(_req(rid))
+    first = b.drain(max_batches=1)
+    assert [r.rid for r in first[0]] == [0, 1, 2, 3]
+    rest = b.drain()
+    assert [len(batch) for batch in rest] == [4, 2]  # final batch is partial
+    assert len(b) == 0 and b.drain() == []
+
+
+def test_admission_waits_when_every_slot_is_occupied(engine, prompts, reference):
+    """More live requests than slots: prompts must queue (not crash, not
+    steal occupied slots) and be admitted as retirements free slots."""
+    for layout in ("dense", "paged"):
+        kw = {"cache_layout": layout}
+        if layout == "paged":
+            kw["block_size"] = 4
+        stats = _serve(engine, prompts, num_slots=2, **kw)
+        assert stats.sequences_by_rid() == reference
+        assert len(stats.delays) == len(prompts)
+
+
+def test_whole_batch_retires_in_one_step(engine, prompts):
+    """threshold=0 exits every request at the first branch: entire batches
+    retire in a single completion event, freeing all slots at once; slots
+    must be reusable by the requests still queued behind them."""
+    saved = engine.state.thresholds.copy()
+    try:
+        engine.state.thresholds = np.zeros_like(engine.state.thresholds)
+        for layout in ("dense", "paged"):
+            kw = {"cache_layout": layout}
+            if layout == "paged":
+                kw["block_size"] = 4
+            stats = _serve(engine, prompts, num_slots=2, **kw)
+            assert len(stats.delays) == len(prompts)
+            first_exit = min(engine.cfg.exit_stages)
+            assert set(stats.exit_stage) == {first_exit}
+            assert all(len(toks) == 1 for toks in stats.gen_tokens)
+    finally:
+        engine.state.thresholds = saved
+
+
+def test_num_slots_one_serializes_but_completes(engine, prompts, reference):
+    """A single cache slot per replica degenerates to one-at-a-time decode;
+    everything still completes with identical tokens."""
+    for layout in ("dense", "paged"):
+        kw = {"cache_layout": layout}
+        if layout == "paged":
+            kw["block_size"] = 4
+        stats = _serve(engine, prompts, num_slots=1, **kw)
+        assert stats.sequences_by_rid() == reference
+        assert stats.peak_in_flight >= 1

@@ -1,0 +1,223 @@
+"""Hypothesis property tests for ``serving.paging.BlockAllocator``.
+
+A stateful machine drives random alloc / fork / append / free schedules
+against a shadow model of the device pool (a Python list per block) and
+checks, after every step:
+
+  * refcounts equal the number of live block-table references per block;
+  * no double-free (freeing a retired handle raises; internal rc never < 0);
+  * freed blocks are reused before never-used ones ("pool growth");
+  * copy-on-write never mutates a block another sequence reads — every live
+    sequence reads back exactly its own token history through its table;
+  * prefix sharing only ever shares blocks with identical content.
+
+Run locally with ``pip install -r requirements-dev.txt``; CI runs a longer
+seeded pass via ``HYPOTHESIS_PROFILE=ci-fuzz``.
+"""
+import os
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+from hypothesis.stateful import (  # noqa: E402
+    RuleBasedStateMachine,
+    invariant,
+    precondition,
+    rule,
+)
+
+from repro.serving.paging import BlockAllocator, blocks_for  # noqa: E402
+
+settings.register_profile(
+    "ci-fuzz",
+    max_examples=600,
+    stateful_step_count=80,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.register_profile(
+    "local",
+    max_examples=30,
+    stateful_step_count=40,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "local"))
+
+NUM_BLOCKS, BLOCK_SIZE = 24, 4
+
+
+class AllocatorMachine(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.alloc = BlockAllocator(NUM_BLOCKS, BLOCK_SIZE, prefix_sharing=True)
+        # shadow of the device pool: one content cell per (block, offset)
+        self.blocks = [[None] * BLOCK_SIZE for _ in range(NUM_BLOCKS)]
+        self.seqs: dict[int, list] = {}  # handle -> expected token history
+        self.next_token = 10_000  # appended tokens are globally unique
+
+    def _assert_reuse_before_growth(self, fresh_before: int) -> None:
+        if self.alloc._fresh > fresh_before:
+            assert not self.alloc._free, (
+                "took never-used blocks while freed blocks were available"
+            )
+
+    @rule(data=st.data())
+    def alloc_prompt(self, data):
+        # tiny token alphabet: prefix collisions (sharing) happen constantly
+        toks = data.draw(
+            st.lists(st.integers(0, 3), min_size=1, max_size=3 * BLOCK_SIZE + 2)
+        )
+        fresh_before = self.alloc._fresh
+        res = self.alloc.alloc(toks)
+        if res is None:
+            return
+        self._assert_reuse_before_growth(fresh_before)
+        assert len(res.table) == blocks_for(len(toks), BLOCK_SIZE)
+        for j, (blk, shared) in enumerate(zip(res.table, res.shared)):
+            chunk = list(toks[j * BLOCK_SIZE : (j + 1) * BLOCK_SIZE])
+            if shared:
+                # sharing must be content-exact — the block already holds
+                # precisely this (full) chunk
+                assert len(chunk) == BLOCK_SIZE
+                assert self.blocks[blk][: len(chunk)] == chunk
+            else:
+                for o, t in enumerate(chunk):
+                    self.blocks[blk][o] = t
+        self.seqs[res.handle] = list(toks)
+
+    @precondition(lambda self: self.seqs)
+    @rule(data=st.data())
+    def fork_seq(self, data):
+        h = data.draw(st.sampled_from(sorted(self.seqs)))
+        nh = self.alloc.fork(h)
+        assert nh not in self.seqs
+        self.seqs[nh] = list(self.seqs[h])
+
+    @precondition(lambda self: self.seqs)
+    @rule(data=st.data())
+    def append_token(self, data):
+        h = data.draw(st.sampled_from(sorted(self.seqs)))
+        fresh_before = self.alloc._fresh
+        res = self.alloc.append(h)
+        if res is None:
+            assert self.alloc.free_blocks == 0
+            return
+        self._assert_reuse_before_growth(fresh_before)
+        if res.cow is not None:
+            src, dst = res.cow
+            assert res.block == dst
+            self.blocks[dst] = list(self.blocks[src])  # the device block copy
+        tok = self.next_token
+        self.next_token += 1
+        self.blocks[res.block][res.offset] = tok
+        self.seqs[h].append(tok)
+
+    @precondition(lambda self: self.seqs)
+    @rule(data=st.data())
+    def free_seq(self, data):
+        h = data.draw(st.sampled_from(sorted(self.seqs)))
+        self.alloc.free(h)
+        del self.seqs[h]
+        with pytest.raises(ValueError):
+            self.alloc.free(h)  # double free must raise, not corrupt
+
+    # -- invariants, checked after every step -------------------------------
+
+    @invariant()
+    def refcounts_match_live_references(self):
+        counts = [0] * NUM_BLOCKS
+        for h in self.seqs:
+            for b in self.alloc.table(h):
+                counts[b] += 1
+        assert counts == self.alloc.refcounts()
+
+    @invariant()
+    def pool_accounting_consistent(self):
+        assert 0 <= self.alloc.free_blocks <= NUM_BLOCKS
+        live = sum(1 for rc in self.alloc.refcounts() if rc > 0)
+        assert self.alloc.used_blocks == live
+
+    @invariant()
+    def every_sequence_reads_back_its_own_history(self):
+        """The central COW/aliasing property: shared blocks are never
+        mutated, so each live table resolves to exactly its own tokens."""
+        for h, toks in self.seqs.items():
+            tab = self.alloc.table(h)
+            got = [
+                self.blocks[tab[j // BLOCK_SIZE]][j % BLOCK_SIZE]
+                for j in range(len(toks))
+            ]
+            assert got == toks
+
+
+TestAllocatorStateMachine = AllocatorMachine.TestCase
+
+
+# ---------------------------------------------------------------------------
+# direct properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 40), st.integers(1, 7))
+def test_freed_blocks_reused_before_growth(n_tokens, block_size):
+    a = BlockAllocator(64, block_size, prefix_sharing=False)
+    r1 = a.alloc(list(range(n_tokens)))
+    high_water = a._fresh
+    a.free(r1.handle)
+    r2 = a.alloc(list(range(1000, 1000 + n_tokens)))
+    assert sorted(r2.table) == sorted(r1.table)
+    assert a._fresh == high_water  # no growth: the freed blocks sufficed
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=20))
+def test_identical_prompts_share_exactly_the_full_blocks(toks):
+    a = BlockAllocator(32, BLOCK_SIZE)
+    r1 = a.alloc(toks)
+    r2 = a.alloc(toks)
+    n_full = len(toks) // BLOCK_SIZE
+    assert r2.shared == [True] * n_full + [False] * (len(r2.table) - n_full)
+    assert r2.table[:n_full] == r1.table[:n_full]
+    for b in r1.table[:n_full]:
+        assert a.refcount(b) == 2
+
+
+def test_double_free_raises_and_leaves_pool_intact():
+    a = BlockAllocator(4, 2)
+    r = a.alloc([1, 2, 3])
+    a.free(r.handle)
+    free_after = a.free_blocks
+    with pytest.raises(ValueError):
+        a.free(r.handle)
+    assert a.free_blocks == free_after == 4
+
+
+def test_copy_on_write_moves_writer_not_reader():
+    a = BlockAllocator(8, 4)
+    r = a.alloc([1, 2, 3])  # one partial block
+    f = a.fork(r.handle)
+    res = a.append(f)  # position 3 falls in the shared partial block
+    assert res is not None and res.cow is not None
+    src, dst = res.cow
+    assert a.table(r.handle) == [src]  # the reader keeps the original
+    assert a.table(f) == [dst]  # the writer moved to a private copy
+    assert a.refcount(src) == 1 and a.refcount(dst) == 1
+
+
+def test_append_crossing_block_boundary_takes_fresh_block():
+    a = BlockAllocator(8, 2)
+    r = a.alloc([1, 2])  # exactly one full block
+    res = a.append(r.handle)
+    assert res is not None and res.new_block and res.cow is None
+    assert res.offset == 0 and len(a.table(r.handle)) == 2
+
+
+def test_alloc_returning_none_leaves_no_partial_state():
+    a = BlockAllocator(2, 2, prefix_sharing=False)
+    r1 = a.alloc([1, 2, 3])  # 2 blocks: pool now full
+    assert r1 is not None and a.free_blocks == 0
+    assert a.alloc([9, 9, 9]) is None
+    assert a.free_blocks == 0 and a.live_handles() == [r1.handle]
+    a.free(r1.handle)
+    assert a.free_blocks == 2
