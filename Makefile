@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-cov fuzz bench bench-decode bench-paged bench-smoke lint
+.PHONY: test test-cov fuzz bench bench-decode bench-paged bench-control bench-smoke lint
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -27,12 +27,21 @@ bench-decode:
 bench-paged:
 	$(PYTHON) benchmarks/decode_throughput.py --cache-layout paged
 
-# CI-sized decode benches: tiny workloads, assert the cached/stateless/
-# monolithic outputs agree (and paged == dense bitwise with >= 2x in-flight
-# at equal KV bytes) and that the JSON schemas hold
+# closed-loop vs static-once DTO-EE over the live engine, threshold-aware
+# packing vs FIFO, simulator event-harvest A/B; writes BENCH_control.json
+bench-control:
+	$(PYTHON) benchmarks/control_loop.py
+
+# CI-sized benches: tiny workloads, assert the cached/stateless/monolithic
+# outputs agree (paged == dense bitwise with >= 2x in-flight at equal KV
+# bytes; fifo == threshold packing token-identical with no extra padding;
+# closed loop reconfigures with accuracy pinned) and the JSON schemas hold.
+# Outputs land in bench-artifacts/ so CI can upload them per PR.
 bench-smoke:
-	$(PYTHON) benchmarks/decode_throughput.py --smoke --out /tmp/BENCH_decode_smoke.json
-	$(PYTHON) benchmarks/decode_throughput.py --smoke --cache-layout paged --out /tmp/BENCH_paged_smoke.json
+	mkdir -p bench-artifacts
+	$(PYTHON) benchmarks/decode_throughput.py --smoke --out bench-artifacts/BENCH_decode_smoke.json
+	$(PYTHON) benchmarks/decode_throughput.py --smoke --cache-layout paged --out bench-artifacts/BENCH_paged_smoke.json
+	$(PYTHON) benchmarks/control_loop.py --smoke --out bench-artifacts/BENCH_control_smoke.json
 
 # syntax check of every tree (no third-party linter baked into the image;
 # swap in ruff/pyflakes here once available)

@@ -55,6 +55,20 @@ class PhaseResult:
     rounds_run: int
 
 
+def clone_state(state: DtoState) -> DtoState:
+    """Independent copy for speculative configuration phases (the online
+    controller plans against measured topologies without touching the live
+    state until the install point).  The carry's jnp arrays are immutable and
+    shared; the host-side numpy arrays are copied."""
+    return DtoState(
+        carry=state.carry,
+        thresholds=state.thresholds.copy(),
+        stage_remaining=state.stage_remaining.copy(),
+        accuracy=state.accuracy,
+        round=state.round,
+    )
+
+
 def uniform_strategy(topo: Topology) -> jnp.ndarray:
     """p_{i,j}^0 = 1/|L_i| (Alg. 3 line 1)."""
     deg = np.maximum(topo.out_degree(), 1)

@@ -170,7 +170,9 @@ def delay_impact(
     """sum_i Delta D_i^h (Eq. 17) over the stage's nodes: early exit is
     'offloading to a virtual node', so scaling I rescales the downstream
     gradient Omega."""
-    if I_h <= 1e-9:
+    if I_h <= 1e-9 or total_phi <= 1e-12:
+        # no load (e.g. a measured topology before any arrival lands in the
+        # telemetry window): a threshold move cannot change the delay
         return 0.0
     scale = (I_h_new - I_h) / I_h
     return float(np.sum(phi_stage_nodes / total_phi * scale * omega_stage_nodes))

@@ -205,6 +205,31 @@ def with_capacity_scale(topo: Topology, scale: float) -> Topology:
     return dataclasses.replace(topo, mu=mu)
 
 
+def with_link_degradation(
+    topo: Topology,
+    pairs: Sequence[tuple[int, int]],
+    factor: float,
+) -> Topology:
+    """Scale the bandwidth of the named (src, dst) links by ``factor``
+    (congestion / interference on specific hops, paper §4.3's dynamic links).
+
+    Unknown pairs are ignored — the caller may hold a pair list predating a
+    node failure that dropped some of those edges.
+    """
+    if factor <= 0:
+        raise ValueError("link degradation factor must be positive")
+    rate = topo.edge_rate.copy()
+    index = {
+        (int(s), int(d)): i
+        for i, (s, d) in enumerate(zip(topo.edge_src, topo.edge_dst))
+    }
+    for pair in pairs:
+        i = index.get((int(pair[0]), int(pair[1])))
+        if i is not None:
+            rate[i] = rate[i] * factor
+    return dataclasses.replace(topo, edge_rate=rate)
+
+
 def with_node_failure(topo: Topology, dead_node: int) -> Topology:
     """Drop a failed ES: remove its in/out edges (capacity -> 0 keeps indexing
     stable; the router must renormalize offloading probabilities).

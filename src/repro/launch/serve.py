@@ -3,6 +3,15 @@
 Boots a reduced model, partitions it into stages over a small edge topology,
 runs DTO-EE configuration phases between time slots, and serves Poisson
 request streams through the REAL model with live early-exit confidences.
+
+Two control-plane modes:
+
+  * default — the paper's slotted loop: one configuration phase BEFORE each
+    slot's serve, capacities re-randomized between slots;
+  * ``--reconfig-interval R`` (and/or ``--scenario``) — the ONLINE loop: one
+    long serve during which telemetry feeds a ReconfigController that
+    re-optimizes p/thresholds every R simulated seconds while a scenario
+    perturbs the live environment.
 """
 from __future__ import annotations
 
@@ -12,6 +21,14 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.control import (
+    ControllerConfig,
+    ReconfigController,
+    SCENARIO_NAMES,
+    Telemetry,
+    TelemetryConfig,
+    get_scenario,
+)
 from repro.core import dto_ee
 from repro.core.profiles import profile_from_arch
 from repro.core.thresholds import synthetic_validation
@@ -78,6 +95,43 @@ def main() -> None:
         action="store_true",
         help="disable prompt-prefix block sharing under the paged layout",
     )
+    ap.add_argument(
+        "--reconfig-interval",
+        type=float,
+        default=None,
+        metavar="SECONDS",
+        help="enable the ONLINE control plane: run one long serve and let a "
+        "ReconfigController re-optimize p/thresholds from live telemetry "
+        "every SECONDS of simulated time (atomic install after the "
+        "decision time; hysteresis skips quiet environments)",
+    )
+    ap.add_argument(
+        "--reconfig-rounds",
+        type=int,
+        default=30,
+        help="DTO-EE rounds per online configuration phase (decision time = "
+        "rounds x 2 ms)",
+    )
+    ap.add_argument(
+        "--scenario",
+        choices=SCENARIO_NAMES,
+        default=None,
+        help="perturb the live environment mid-serve: 'burst' (a subset of "
+        "EDs floods 3x), 'slowdown' (the busiest stage-1 replica throttles "
+        "to 15%% of nameplate), 'link' (its uplinks degrade 10x), 'failure' "
+        "(it fail-stops; tasks re-execute from their EDs — needs "
+        "--gen-len 1).  Implies the online serve mode.",
+    )
+    ap.add_argument(
+        "--batch-policy",
+        choices=("fifo", "threshold"),
+        default="fifo",
+        help="batch formation: 'fifo' (arrival order), or 'threshold' — "
+        "threshold-aware packing that groups rows by predicted exit stage "
+        "(confidence history vs the live DTO-EE thresholds) and trims "
+        "batches to exact padded shapes; token-identical outputs, lower "
+        "padded-row waste",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -98,6 +152,68 @@ def main() -> None:
     rcfg = RequestConfig(
         arrival_rate=args.requests_per_slot / args.slot_seconds, seed=args.seed
     )
+    serve_kw = dict(
+        batch_size=args.batch_size,
+        gen_len=args.gen_len,
+        decode_mode=args.decode_mode,
+        num_slots=args.num_slots,
+        cache_layout=args.cache_layout,
+        block_size=args.block_size,
+        num_blocks=args.num_blocks,
+        prefix_sharing=not args.no_prefix_sharing,
+        batch_policy=args.batch_policy,
+    )
+
+    if args.reconfig_interval is not None or args.scenario is not None:
+        # ONLINE mode: one long serve, closed-loop reconfiguration mid-flight
+        engine.configuration_phase()
+        horizon = args.slots * args.slot_seconds
+        reqs = poisson_requests(cfg, rcfg, horizon)
+        prompts = [tok for _, tok in reqs][: args.requests_per_slot * args.slots]
+        span = len(prompts) / rcfg.arrival_rate
+        telemetry = Telemetry(
+            engine.topo, TelemetryConfig(window_s=args.slot_seconds / 2)
+        )
+        controller = None
+        if args.reconfig_interval is not None:
+            controller = ReconfigController(
+                telemetry,
+                ControllerConfig(
+                    interval=args.reconfig_interval, rounds=args.reconfig_rounds
+                ),
+            )
+        scenario = None
+        if args.scenario is not None:
+            scenario = get_scenario(
+                args.scenario, engine.topo, p=engine.p, horizon=span,
+                seed=args.seed,
+            )
+        stats = engine.serve(
+            prompts,
+            duration=horizon,
+            arrival_rate=rcfg.arrival_rate,
+            scenario=scenario,
+            controller=controller,
+            telemetry=telemetry,
+            **serve_kw,
+        )
+        s = stats.summary()
+        cap = ", ".join(
+            f"{v}: {mu:.1f}" for v, mu in sorted(s["capacity_estimates"].items())
+        )
+        print(
+            f"online: {s['num_completed']} done  "
+            f"mean_delay {s['mean_delay']*1e3:.1f}ms  "
+            f"std {s['delay_std']*1e3:.1f}ms  p95 {s['p95_delay']*1e3:.1f}ms  "
+            f"reconfigs {s['num_reconfigs']}  resubmitted {s['resubmitted']}  "
+            f"padded waste {s['padded_row_frac']*100:.1f}%  "
+            f"exits {s['exit_histogram']}",
+            flush=True,
+        )
+        print(f"capacity estimates (GFLOP/s): {cap}")
+        print("done")
+        return
+
     for slot in range(args.slots):
         engine.configuration_phase()
         reqs = poisson_requests(cfg, rcfg, args.slot_seconds)
@@ -106,14 +222,7 @@ def main() -> None:
             prompts,
             duration=args.slot_seconds,
             arrival_rate=rcfg.arrival_rate,
-            batch_size=args.batch_size,
-            gen_len=args.gen_len,
-            decode_mode=args.decode_mode,
-            num_slots=args.num_slots,
-            cache_layout=args.cache_layout,
-            block_size=args.block_size,
-            num_blocks=args.num_blocks,
-            prefix_sharing=not args.no_prefix_sharing,
+            **serve_kw,
         )
         s = stats.summary()
         paged_info = (

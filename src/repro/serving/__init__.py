@@ -1,11 +1,14 @@
 from repro.serving.batching import (
+    ExitPredictor,
     FifoBatcher,
     Request,
     ShapeBucketBatcher,
     SlotRing,
     batch_tokens,
+    pack_decode_batch,
     pad_tokens,
     padded_batch_size,
+    pow2_floor,
 )
 from repro.serving.engine import CollaborativeEngine, ServeStats, StagePrograms
 from repro.serving.paging import AllocResult, AppendResult, BlockAllocator, blocks_for
@@ -27,8 +30,9 @@ from repro.serving.steps import (
 )
 
 __all__ = [
-    "FifoBatcher", "Request", "ShapeBucketBatcher", "SlotRing", "batch_tokens",
-    "pad_tokens", "padded_batch_size",
+    "ExitPredictor", "FifoBatcher", "Request", "ShapeBucketBatcher", "SlotRing",
+    "batch_tokens", "pack_decode_batch", "pad_tokens", "padded_batch_size",
+    "pow2_floor",
     "AllocResult", "AppendResult", "BlockAllocator", "blocks_for",
     "CollaborativeEngine", "ServeStats", "StagePrograms",
     "make_block_copy", "make_decode_step", "make_embed_step",

@@ -29,6 +29,7 @@ class Request:
     # runtime state
     stage: int = 0
     node: int = -1
+    ed: int = -1  # arrival end device (failure re-submissions restart here)
     hidden: Any = None  # residual stream handed between stages
     exited: bool = False
     exit_stage: int = -1
@@ -46,6 +47,9 @@ class Request:
     slots: dict = dataclasses.field(default_factory=dict)
     # paged layout: node -> BlockAllocator sequence handle at that replica
     block_seq: dict = dataclasses.field(default_factory=dict)
+    # latest observed confidence per early branch (previous token's reading;
+    # the threshold-aware packer's exit predictor reads these)
+    last_conf: dict = dataclasses.field(default_factory=dict)
 
     @property
     def delay(self) -> float:
@@ -125,6 +129,13 @@ class ShapeBucketBatcher:
             return None
         _, key = min(heads)
         return key, self.buckets[key].queue[0]
+
+    def head_len(self) -> int:
+        """Queue length of the bucket the next ``pop_batch`` would serve
+        (0 when idle) — lets a packing policy trim the take to an exact
+        padded shape before committing to the pop."""
+        head = self.peek()
+        return len(self.buckets[head[0]].queue) if head is not None else 0
 
     def pop_batch(
         self, max_take: int | None = None
@@ -207,6 +218,80 @@ def padded_batch_size(n: int, batch_size: int) -> int:
     while b < n:
         b <<= 1
     return min(b, batch_size)
+
+
+def pow2_floor(n: int) -> int:
+    """Largest power of two <= n (n >= 1) — the biggest batch that pads to
+    exactly itself under ``padded_batch_size``."""
+    if n < 1:
+        raise ValueError("pow2_floor needs n >= 1")
+    b = 1
+    while b * 2 <= n:
+        b <<= 1
+    return b
+
+
+class ExitPredictor:
+    """Predicts a decode row's retirement class from the DTO-EE thresholds
+    and the row's own confidence history (the threshold-aware batch policy).
+
+    Exit decisions per token are fresh reads of the model's branch
+    confidences, but confidences autocorrelate strongly across a request's
+    tokens — a row whose last token's branch-``b`` confidence already sits
+    within ``margin`` of the threshold ``c_b`` is very likely to clear it on
+    an upcoming token.  Rows not near any threshold retire when their
+    generation budget runs out, so their class is the remaining token count.
+
+    ``thresholds_fn`` is read at every call: when the online controller
+    swaps thresholds mid-serve, predictions follow immediately.
+    """
+
+    def __init__(self, thresholds_fn, gen_len: int, margin: float = 0.9):
+        self.thresholds_fn = thresholds_fn
+        self.gen_len = gen_len
+        self.margin = margin
+
+    def __call__(self, req: Request) -> Hashable:
+        thresholds = self.thresholds_fn()
+        for b in range(len(thresholds)):
+            c = req.last_conf.get(b)
+            if c is not None and c >= self.margin * float(thresholds[b]):
+                return ("exit", b)
+        return ("run", self.gen_len - len(req.generated))
+
+
+def pack_decode_batch(
+    items: list,
+    batch_size: int,
+    classify,
+) -> tuple[list, list]:
+    """Threshold-aware batch packing over a FIFO decode queue.
+
+    ``items`` is the queue content, ``(seq, Request)`` pairs in FIFO order.
+    The head row always dispatches (no starvation); the batch is filled
+    first with rows sharing the head's predicted retirement class — so the
+    whole batch tends to retire together instead of bleeding rows one at a
+    time — then with the remaining rows in FIFO order.  When fewer rows than
+    ``batch_size`` are available, the take is trimmed to the largest power
+    of two so the padded shape holds zero dead rows (``padded_batch_size``
+    pads to the next power of two; a 5-row batch would ship 3 padding rows).
+
+    Returns ``(take, rest)`` with ``rest`` in the original FIFO order.
+    """
+    if not items:
+        return [], []
+    classes = [classify(r) for _, r in items]
+    head_cls = classes[0]
+    same = [it for it, c in zip(items, classes) if c == head_cls]
+    other = [it for it, c in zip(items, classes) if c != head_cls]
+    cand = (same + other)[:batch_size]
+    n = len(cand)
+    if n < batch_size:
+        n = pow2_floor(n)
+    taken = {id(it) for it in cand[:n]}
+    take = cand[:n]
+    rest = [it for it in items if id(it) not in taken]
+    return take, rest
 
 
 def batch_tokens(reqs: list[Request], batch_size: int, pad_id: int = 0) -> np.ndarray:

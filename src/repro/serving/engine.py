@@ -65,19 +65,47 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import dto_ee
+from repro.core import topology as topo_lib
 from repro.core.simulator import RoutingCdf
 from repro.core.thresholds import ExitProfile
 from repro.core.types import DtoHyperParams, ModelProfile, Topology
 from repro.models import model as model_lib
+from repro.runtime import elastic
 from repro.serving import steps
 from repro.serving.batching import (
+    ExitPredictor,
     Request,
     ShapeBucketBatcher,
     SlotRing,
     batch_tokens,
+    pack_decode_batch,
     padded_batch_size,
+    pow2_floor,
 )
 from repro.serving.paging import BlockAllocator
+
+
+def _thinned_arrivals(
+    rng: np.random.Generator,
+    base_rate: float,
+    factor,
+    f_max: float,
+    n: int,
+) -> np.ndarray:
+    """Non-homogeneous Poisson arrival times for ``n`` requests by thinning:
+    candidates arrive at ``base_rate * f_max`` and are accepted with
+    probability ``factor(t) / f_max`` (the scenario's piecewise arrival-rate
+    modulation, e.g. a burst window)."""
+    lam = base_rate * max(f_max, 1e-12)
+    out = np.empty(n, np.float64)
+    t = 0.0
+    k = 0
+    while k < n:
+        t += rng.exponential(1.0 / lam)
+        if rng.random() * f_max <= factor(t):
+            out[k] = t
+            k += 1
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +232,12 @@ class ServeStats:
     prefix_hit_blocks: int = 0
     prefix_total_blocks: int = 0
     block_occupancy: list = dataclasses.field(default_factory=list)
+    # online control plane: mid-serve strategy installs, failure re-executions,
+    # and the straggler monitor's end-of-serve capacity estimates per ES
+    num_reconfigs: int = 0
+    reconfig_times: list = dataclasses.field(default_factory=list)
+    resubmitted: int = 0
+    capacity_estimates: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> dict:
         d = np.asarray(self.delays)
@@ -215,6 +249,7 @@ class ServeStats:
         return {
             "num_completed": int(d.size),
             "mean_delay": float(d.mean()) if d.size else float("nan"),
+            "delay_std": float(d.std()) if d.size else float("nan"),
             "p95_delay": float(np.percentile(d, 95)) if d.size else float("nan"),
             "exit_histogram": {
                 int(s): int((es == s).sum()) for s in np.unique(es)
@@ -252,6 +287,10 @@ class ServeStats:
                 if self.block_occupancy
                 else float("nan")
             ),
+            # online control plane
+            "num_reconfigs": self.num_reconfigs,
+            "resubmitted": self.resubmitted,
+            "capacity_estimates": dict(self.capacity_estimates),
         }
 
     def by_rid(self) -> dict[int, tuple[int, int]]:
@@ -296,6 +335,12 @@ class CollaborativeEngine:
         self.stage_to_branch = {
             s: b for b, s in enumerate(exit_profile.branch_stage[:-1])
         }
+        # live capacity tracker: every stage batch folds its (GFLOPs, wall)
+        # into the EWMA, so a throttled replica's estimate sinks even while
+        # the optimizer's view (self.topo) is stale — the measurement half
+        # of the closed control loop.  Estimates persist across serves and
+        # topology swaps (node ids are stable).
+        self.straggler = elastic.StragglerMonitor.from_topology(topo)
 
     # -- control plane ------------------------------------------------------
     def update_topology(self, new_topo: Topology) -> None:
@@ -371,6 +416,10 @@ class CollaborativeEngine:
         block_size: int = 16,
         num_blocks: int | None = None,
         prefix_sharing: bool = True,
+        batch_policy: str = "fifo",
+        controller=None,
+        scenario=None,
+        telemetry=None,
     ) -> ServeStats:
         """Serve ``prompts`` arriving as a Poisson stream.
 
@@ -409,6 +458,33 @@ class CollaborativeEngine:
             to the dense layout; admission additionally waits for pool
             blocks, and a serve whose pool is too small for its working set
             raises instead of deadlocking silently.
+
+        Online control plane (``repro.control``):
+
+          * ``telemetry`` — a streaming sink (``Telemetry`` or anything with
+            its hook methods) receiving per-arrival / per-batch /
+            per-transfer / per-exit observations as the simulated clock
+            advances.
+          * ``controller`` — a ``ReconfigController``; every
+            ``controller.interval`` sim-seconds it plans a reconfiguration
+            from the telemetry's measured topology and, after the plan's
+            decision time has elapsed (routing stays on the stale strategy
+            meanwhile, as the paper charges slow deciders), atomically
+            installs the new ``p``/thresholds into the engine.
+          * ``scenario`` — a ``Scenario`` of timed environment
+            perturbations (bursts, slowdowns, link degradation, node
+            failure).  Physics then run on a private copy of the serve-time
+            topology: ``self.topo`` stays the optimizer's view and only
+            learns of the drift through telemetry + reconfiguration.
+            Failure events re-execute every task resident on the dead
+            replica from its source ED and require the stateless
+            single-shot plane (gen_len=1); cache migration is a follow-on.
+          * ``batch_policy="threshold"`` — threshold-aware batch packing:
+            decode batches are filled with rows sharing the head row's
+            predicted retirement class (confidence history vs the *current*
+            thresholds) so batches retire together, and takes are trimmed
+            to exact padded shapes — recovering ``padded_row_frac`` waste
+            with token-identical outputs.
         """
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
@@ -430,7 +506,32 @@ class CollaborativeEngine:
             raise ValueError("autoregressive decode needs a token frontend")
         if any(int(p.shape[0]) < 1 for p in prompts):
             raise ValueError("prompts must be non-empty")
-        topo, profile = self.topo, self.profile
+        if batch_policy not in ("fifo", "threshold"):
+            raise ValueError("batch_policy must be 'fifo' or 'threshold'")
+        if controller is not None and telemetry is None:
+            telemetry = controller.telemetry
+        if scenario is not None and any(
+            ev.kind == "fail" for ev in scenario.events
+        ) and (cached or gen_len > 1):
+            raise ValueError(
+                "failure scenarios re-execute tasks from their source ED and "
+                "need the stateless single-shot plane (gen_len=1, "
+                "decode_mode='stateless'); cache migration is a follow-on"
+            )
+        profile = self.profile
+        if scenario is not None:
+            # physics run on a PRIVATE copy of the serve-time topology: the
+            # scenario mutates physical truth, while self.topo remains the
+            # optimizer's view and only learns of the drift through
+            # telemetry + reconfiguration (the closed loop under test)
+            topo = dataclasses.replace(
+                self.topo,
+                mu=self.topo.mu.copy(),
+                phi_ext=self.topo.phi_ext.copy(),
+                edge_rate=self.topo.edge_rate.copy(),
+            )
+        else:
+            topo = self.topo
         programs = self.programs
         H = profile.num_stages
         eds = topo.nodes_at_stage(0)
@@ -441,26 +542,61 @@ class CollaborativeEngine:
         )
         n = len(prompts)
         if rate > 0 and np.isfinite(rate):
-            arrivals = np.cumsum(self.rng.exponential(1.0 / rate, size=n))
+            if scenario is not None and scenario.modulates_arrivals:
+                arrivals = _thinned_arrivals(
+                    self.rng,
+                    rate,
+                    scenario.arrival_factor,
+                    scenario.max_arrival_factor,
+                    n,
+                )
+            else:
+                arrivals = np.cumsum(self.rng.exponential(1.0 / rate, size=n))
         else:
             arrivals = np.sort(self.rng.uniform(0.0, duration, size=n))
         # arrival nodes follow the optimizer's traffic model: each request
         # lands on an ED with probability proportional to its phi_ext
         ed_w = topo.phi_ext[eds]
         if n and ed_w.sum() > 0:
-            ed_idx = self.rng.choice(len(eds), size=n, p=ed_w / ed_w.sum())
+            if scenario is not None and scenario.modulates_eds:
+                # scenario skews WHICH devices produce during its windows
+                ed_idx = np.empty(n, np.int64)
+                for i, t in enumerate(arrivals):
+                    w = scenario.ed_weights(float(t), eds, ed_w)
+                    ed_idx[i] = self.rng.choice(len(eds), p=w / w.sum())
+            else:
+                ed_idx = self.rng.choice(len(eds), size=n, p=ed_w / ed_w.sum())
         else:
             ed_idx = np.arange(n) % max(len(eds), 1)
+        packer = None
+        if batch_policy == "threshold":
+            # reads self.thresholds lazily, so mid-serve reconfigurations
+            # re-aim the exit predictions immediately
+            packer = ExitPredictor(lambda: self.thresholds, gen_len)
+        # one capacity EWMA, not two: the telemetry adopts the engine's
+        # monitor so the capacity_estimates reported in ServeStats are
+        # exactly the numbers the controller planned from
+        shared_monitor = telemetry is not None and hasattr(
+            telemetry, "attach_monitor"
+        )
+        if shared_monitor:
+            telemetry.attach_monitor(self.straggler)
 
         stats = ServeStats()
-        # p is fixed for the duration of the serve call: one precomputed CDF
-        # serves every routing sample (shared with the simulator)
+        # one precomputed CDF serves every routing sample (shared with the
+        # simulator); the controller's installs and node failures rebuild it
         route = RoutingCdf(topo, self.p)
         # event heap: (time, seq, kind, payload)
         #   kind 0: transfer done, request joins ``node``   payload (req, node)
         #   kind 1: batch service done at ``node``          payload (node, reqs,
         #           conf [B] | None, tok [B] | None, is_decode_pass)
+        #   kind 2: control plane                           payload ("scenario",
+        #           event idx) | ("reconfig",) | ("install", plan)
+        #   kind 3: deferred ED arrival (scenario runs only; the first hop's
+        #           transfer time must see the environment AT arrival time)
+        #           payload: req
         heap: list = []
+        dead_nodes: set[int] = set()
         seq = itertools.count()
         wait_seq = itertools.count()  # FIFO order shared across queue kinds
         es_nodes = [int(v) for v in range(topo.num_nodes) if topo.node_stage[v] > 0]
@@ -661,15 +797,29 @@ class CollaborativeEngine:
                 # that task's per-token share, alpha / prompt_len — O(1) in
                 # the prefix versus the full alpha a stateless re-prefill
                 # pass pays
-                service = (
-                    profile.alpha[h - 1]
-                    / float(topo.mu[node])
-                    * sum(1.0 / r.prompt_len for r in reqs)
+                gflops = profile.alpha[h - 1] * sum(
+                    1.0 / r.prompt_len for r in reqs
                 )
             else:
-                service = len(reqs) * profile.alpha[h - 1] / float(topo.mu[node])
+                gflops = len(reqs) * profile.alpha[h - 1]
+            service = gflops / float(topo.mu[node])
             done = max(now, busy_until[node]) + service
             busy_until[node] = done
+            # every batch is a capacity measurement: the EWMA follows the
+            # replica's TRUE (possibly scenario-perturbed) rate, feeding the
+            # controller's effective topology (telemetry.on_batch folds the
+            # observation into the shared monitor; observe directly only
+            # when no telemetry shares it)
+            if not shared_monitor:
+                self.straggler.observe(node, gflops, service)
+            if telemetry is not None:
+                telemetry.on_batch(
+                    done,
+                    node,
+                    gflops,
+                    service,
+                    len(pending[node]) + len(decode_q[node]),
+                )
             heapq.heappush(
                 heap, (done, next(seq), 1, (node, reqs, conf, tok, is_decode_pass))
             )
@@ -710,6 +860,13 @@ class CollaborativeEngine:
                         budget -= cost
                     else:
                         rest.append(item)
+                if packer is not None and take:
+                    # threshold-aware packing on top of the budget filter:
+                    # group the eligible rows by predicted retirement class
+                    # and trim to an exact padded shape; bumped rows rejoin
+                    # the queue in FIFO (seq) order
+                    take, back = pack_decode_batch(take, batch_size, packer)
+                    rest = sorted(back + rest)
                 dh = take[0][0] if take else None
             else:
                 take = rest = []
@@ -721,6 +878,11 @@ class CollaborativeEngine:
                     dq.clear()
                     dq.extend(rest)
                     reqs = [r for _, r in take]
+                elif packer is not None:
+                    take, rest = pack_decode_batch(list(dq), batch_size, packer)
+                    dq.clear()
+                    dq.extend(rest)
+                    reqs = [r for _, r in take]
                 else:
                     reqs = [dq.popleft()[1] for _ in range(min(batch_size, len(dq)))]
                 run_decode(node, reqs, now)
@@ -729,6 +891,16 @@ class CollaborativeEngine:
             if paged:
                 headroom = allocators[node].free_blocks - reserved[node]
                 max_take = min(max_take, headroom // max(prompt_blocks, 1))
+            if packer is not None:
+                # trim the prefill take so the padded batch holds no dead
+                # rows (padded_batch_size pads to the next power of two)
+                head_len = pending[node].head_len()
+                cap = min(head_len, batch_size)
+                if max_take is not None:
+                    cap = min(cap, max_take)
+                if cap >= 1:
+                    trim = pow2_floor(cap)
+                    max_take = trim if max_take is None else min(max_take, trim)
             popped = pending[node].pop_batch(max_take)
             if popped is None:
                 return
@@ -766,6 +938,8 @@ class CollaborativeEngine:
             stats.gen_tokens.append(tuple(req.generated))
             stats.arrivals.append(req.arrival)
             stats.dones.append(done)
+            if telemetry is not None:
+                telemetry.on_exit(done, h)
             if cached and req.slots:
                 live_reqs -= 1
                 freed = list(req.slots.items())
@@ -788,22 +962,147 @@ class CollaborativeEngine:
                     ):
                         dispatch(v, done)
 
-        for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
-            ed = int(eds[ed_idx[i]])
-            req = Request(rid=i, tokens=np.asarray(prompt, np.int32), arrival=t)
-            nxt, e = route.sample(self.rng, ed)
+        def submit(req: Request, t: float) -> None:
+            """First hop: sample a stage-1 replica and ship the raw task."""
+            nxt, e = route.sample(self.rng, req.ed)
             req.path[1] = (nxt, int(e))
             t_cm = profile.beta[0] / float(topo.edge_rate[e])
+            if telemetry is not None:
+                telemetry.on_transfer(t + t_cm, req.ed, nxt, profile.beta[0], t_cm)
             heapq.heappush(heap, (t + t_cm, next(seq), 0, (req, nxt)))
 
+        def resubmit(req: Request, now: float) -> None:
+            """Fail-stop re-execution: a task resident on (or in flight to) a
+            failed replica restarts from scratch at its source ED."""
+            stats.resubmitted += 1
+            req.phase = "prefill"
+            req.hidden = None
+            req.generated.clear()
+            req.path.clear()
+            req.last_conf.clear()
+            submit(req, now)
+
+        for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
+            ed = int(eds[ed_idx[i]])
+            req = Request(
+                rid=i, tokens=np.asarray(prompt, np.int32), arrival=t, ed=ed
+            )
+            if scenario is not None:
+                # defer the first hop to arrival time so it sees the
+                # environment (link rates, routing strategy) AS OF ``t``
+                heapq.heappush(heap, (float(t), next(seq), 3, req))
+            else:
+                submit(req, t)
+
+        if scenario is not None:
+            for i, ev in enumerate(scenario.events):
+                heapq.heappush(heap, (float(ev.time), next(seq), 2, ("scenario", i)))
+        if controller is not None:
+            heapq.heappush(
+                heap,
+                (float(controller.interval), next(seq), 2, ("reconfig",)),
+            )
+
         while heap:
+            if len(stats.delays) == n:
+                break  # all requests measured; only control events remain
             now, _, kind, payload = heapq.heappop(heap)
+            if kind == 3:  # deferred ED arrival
+                submit(payload, now)
+                continue
+            if kind == 2:  # control plane
+                tag = payload[0]
+                if tag == "scenario":
+                    ev = scenario.events[payload[1]]
+                    if ev.kind == "fail":
+                        # (cached failure was rejected up front: no request
+                        # can hold cache residency at the dead replica)
+                        dead = int(ev.node)
+                        # detection is instant: view AND environment drop the
+                        # dead replica's edges in lockstep (same predicate, so
+                        # structures stay aligned), the surviving strategy is
+                        # renormalized, and the optimizer warm-starts from it
+                        new_view, p_new = elastic.handle_failure(
+                            self.topo, self.p, dead
+                        )
+                        env_new = (
+                            new_view
+                            if topo is self.topo
+                            else topo_lib.with_node_failure(topo, dead)
+                        )
+                        self.topo = new_view
+                        self.state = dataclasses.replace(
+                            self.state,
+                            carry=self.state.carry._replace(
+                                p=jnp.asarray(p_new, jnp.float32)
+                            ),
+                        )
+                        self._round_step = dto_ee.make_round_step(
+                            new_view, profile, self.hyper
+                        )
+                        topo = env_new
+                        route = RoutingCdf(topo, self.p)
+                        dead_nodes.add(dead)
+                        self.straggler.mu_hat[dead] = 1e-9
+                        if telemetry is not None:
+                            telemetry.on_failure(now, dead)
+                        # tasks queued at the dead replica re-execute from
+                        # their source EDs (in-service and in-flight ones are
+                        # caught at their event pops via ``dead_nodes``)
+                        while True:
+                            popped = pending[dead].pop_batch()
+                            if popped is None:
+                                break
+                            for r in popped[1]:
+                                resubmit(r, now)
+                    else:
+                        scenario.apply_env(ev, topo)
+                elif tag == "reconfig":
+                    plan = controller.plan(self, now)
+                    if plan is not None:
+                        # routing stays on the stale strategy until the
+                        # decision time has elapsed — slow reconfigurations
+                        # pay for their latency exactly as in the paper
+                        heapq.heappush(
+                            heap,
+                            (
+                                now + plan.decision_time,
+                                next(seq),
+                                2,
+                                ("install", plan),
+                            ),
+                        )
+                    # reschedule only while data-plane events remain: a
+                    # starved serve must drain to the loud stall check below
+                    # instead of ticking forever
+                    if any(ev[2] != 2 for ev in heap):
+                        heapq.heappush(
+                            heap,
+                            (now + controller.interval, next(seq), 2, ("reconfig",)),
+                        )
+                else:  # install
+                    if controller.install(self, payload[1]):
+                        route = RoutingCdf(topo, self.p)
+                        stats.num_reconfigs += 1
+                        stats.reconfig_times.append(now)
+                continue
             if kind == 0:
                 req, node = payload
+                if node in dead_nodes:
+                    resubmit(req, now)
+                    continue
+                if telemetry is not None and req.stage == 0:
+                    telemetry.on_arrival(req.arrival, req.ed)
                 enqueue(req, node, now)
                 continue
             # kind 1: batch done — batched exit decision already on device
             node, reqs, conf, tok, is_decode_pass = payload
+            if node in dead_nodes:
+                # the replica died mid-service: its output is lost, the
+                # whole batch re-executes from the source EDs
+                for req in reqs:
+                    resubmit(req, now)
+                continue
             h = int(topo.node_stage[node])
             b = self.stage_to_branch.get(h)
             for i, req in enumerate(reqs):
@@ -823,11 +1122,15 @@ class CollaborativeEngine:
                     )
                     heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, node1)))
                     continue
-                if b is not None and float(conf[i]) >= self.thresholds[b]:
-                    # confident early exit: emit and retire
-                    req.generated.append(int(tok[i]))
-                    finish(req, now, float(conf[i]), h)
-                    continue
+                if b is not None:
+                    # confidence history feeds the threshold-aware packer's
+                    # exit predictions for this row's NEXT token
+                    req.last_conf[b] = float(conf[i])
+                    if float(conf[i]) >= self.thresholds[b]:
+                        # confident early exit: emit and retire
+                        req.generated.append(int(tok[i]))
+                        finish(req, now, float(conf[i]), h)
+                        continue
                 nh = h + 1
                 if nh in req.path:
                     nxt, e = req.path[nh]
@@ -837,9 +1140,20 @@ class CollaborativeEngine:
                 t_cm = profile.beta[h] / float(topo.edge_rate[e])
                 if is_decode_pass:
                     t_cm /= req.prompt_len
+                if telemetry is not None:
+                    telemetry.on_transfer(
+                        now + t_cm,
+                        node,
+                        nxt,
+                        profile.beta[h] / (req.prompt_len if is_decode_pass else 1),
+                        t_cm,
+                    )
                 heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, nxt)))
             dispatch(node, now)
 
+        stats.capacity_estimates = {
+            int(v): float(self.straggler.mu_hat[v]) for v in es_nodes
+        }
         if len(stats.delays) != n:
             # a stall is resource starvation no future event can clear —
             # fail loudly rather than silently drop requests

@@ -1,0 +1,432 @@
+"""Online control plane: reconfiguration invariants, telemetry estimators,
+live-environment scenarios, threshold-aware packing, simulator coalescing."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.control import (
+    ControllerConfig,
+    ReconfigController,
+    Scenario,
+    ScenarioEvent,
+    Telemetry,
+    TelemetryConfig,
+    arrival_burst,
+    busiest_replica,
+    get_scenario,
+    node_slowdown,
+)
+from repro.core.profiles import profile_from_arch
+from repro.core.thresholds import synthetic_validation
+from repro.core.topology import NetworkSpec, build_edge_network, with_link_degradation
+from repro.core.types import DtoHyperParams
+from repro.models import model as model_lib
+from repro.serving import CollaborativeEngine
+from repro.serving.batching import (
+    ExitPredictor,
+    Request,
+    pack_decode_batch,
+    pow2_floor,
+)
+
+THRESHOLD = 0.1
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced(
+        vocab_size=128, d_model=64, d_ff=128, num_heads=2, num_kv_heads=2,
+        head_dim=32,
+    )
+    params = model_lib.init_params(jax.random.key(0), cfg)
+    profile = profile_from_arch(cfg)
+    topo = build_edge_network(
+        seed=0,
+        profile=profile,
+        spec=NetworkSpec(num_eds=4, es_per_stage=(2, 3)),
+        capacity_scale=0.005,  # paper-like ~10-50 ms stage service times
+    )
+    ep = synthetic_validation(seed=1, profile=profile)
+    return cfg, params, profile, topo, ep
+
+
+def make_engine(setup, seed=0):
+    cfg, params, profile, topo, ep = setup
+    eng = CollaborativeEngine(
+        params, cfg, topo, profile, ep, DtoHyperParams(rounds=20), seed=seed
+    )
+    eng.configuration_phase()
+    eng.state.thresholds = np.full_like(eng.state.thresholds, THRESHOLD)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    rng = np.random.default_rng(2)
+    return [rng.integers(0, 128, size=12).astype(np.int32) for _ in range(12)]
+
+
+def _serve(eng, prompts, seed=7, **kw):
+    eng.rng = np.random.default_rng(seed)
+    kw.setdefault("arrival_rate", 60.0)
+    kw.setdefault("batch_size", 4)
+    return eng.serve(prompts, **kw)
+
+
+def _noop_controller(eng):
+    """A controller that always plans and installs a ZERO-round phase: the
+    installed p / thresholds are bitwise the live ones."""
+    tele = Telemetry(eng.topo, TelemetryConfig(window_s=0.1))
+    return ReconfigController(
+        tele,
+        ControllerConfig(
+            interval=0.03, rounds=0, drift_deadband=-1.0, p_deadband=-1.0
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# reconfiguration invariants (satellite: update_topology warm-start)
+# ---------------------------------------------------------------------------
+
+
+def test_noop_reconfig_install_is_bitwise_invisible(setup, prompts):
+    """Mid-serve installs whose p/thresholds are unchanged must leave every
+    in-flight request bitwise identical to an uninterrupted run — tokens,
+    exits, and even delays."""
+    ref_eng = make_engine(setup)
+    ref = _serve(ref_eng, prompts, gen_len=3, decode_mode="cached")
+    eng = make_engine(setup)
+    ctrl = _noop_controller(eng)
+    stats = _serve(
+        eng, prompts, gen_len=3, decode_mode="cached", controller=ctrl
+    )
+    assert stats.num_reconfigs > 0  # the install path genuinely ran
+    assert stats.sequences_by_rid() == ref.sequences_by_rid()
+    assert stats.exit_stage == ref.exit_stage
+    np.testing.assert_array_equal(stats.delays, ref.delays)
+
+
+def test_update_topology_noop_swap_preserves_stream(setup, prompts):
+    ref = _serve(make_engine(setup), prompts)
+    eng = make_engine(setup)
+    eng.update_topology(dataclasses.replace(eng.topo))
+    stats = _serve(eng, prompts)
+    assert stats.sequences_by_rid() == ref.sequences_by_rid()
+    np.testing.assert_array_equal(stats.delays, ref.delays)
+
+
+def test_update_topology_rejects_edge_set_change(setup):
+    from repro.core.topology import with_node_failure
+
+    eng = make_engine(setup)
+    victim = int(eng.topo.nodes_at_stage(1)[0])
+    broken = with_node_failure(eng.topo, victim)
+    with pytest.raises(ValueError):
+        eng.update_topology(broken)
+
+
+def test_configuration_phase_adapt_false_never_moves_thresholds(setup):
+    eng = make_engine(setup)
+    before = eng.state.thresholds.copy()
+    for _ in range(3):
+        eng.configuration_phase(adapt_thresholds=False)
+        np.testing.assert_array_equal(eng.state.thresholds, before)
+
+
+def test_controller_adapt_false_never_moves_thresholds(setup):
+    eng = make_engine(setup)
+    tele = Telemetry(eng.topo)
+    ctrl = ReconfigController(
+        tele,
+        ControllerConfig(
+            rounds=10, drift_deadband=-1.0, p_deadband=-1.0,
+            adapt_thresholds=False,
+        ),
+    )
+    plan = ctrl.plan(eng, now=1.0)
+    assert plan is not None
+    np.testing.assert_array_equal(plan.state.thresholds, eng.state.thresholds)
+
+
+def test_controller_hysteresis_skips_quiet_environment(setup):
+    eng = make_engine(setup)
+    tele = Telemetry(eng.topo)  # no observations: effective == view
+    ctrl = ReconfigController(tele, ControllerConfig(drift_deadband=0.05))
+    assert ctrl.plan(eng, now=1.0) is None
+    assert ctrl.log[-1]["action"] == "skip"
+
+
+# ---------------------------------------------------------------------------
+# telemetry estimators
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_mu_estimate_tracks_throttled_replica(setup):
+    _, _, _, topo, _ = setup
+    tele = Telemetry(topo, TelemetryConfig(window_s=1.0))
+    node = int(topo.nodes_at_stage(1)[0])
+    true_mu = float(topo.mu[node]) * 0.1  # throttled to 10%
+    for k in range(30):
+        tele.on_batch(0.01 * k, node, gflops=true_mu * 0.01, wall=0.01, queue_depth=2)
+    mu = tele.mu_estimates(topo, now=0.3)
+    assert mu[node] == pytest.approx(true_mu, rel=0.05)
+    other = int(topo.nodes_at_stage(1)[1])
+    assert mu[other] == topo.mu[other]  # unobserved: view value
+
+
+def test_telemetry_arrival_window_evicts(setup):
+    _, _, _, topo, _ = setup
+    tele = Telemetry(topo, TelemetryConfig(window_s=1.0))
+    ed = int(topo.nodes_at_stage(0)[0])
+    for k in range(10):
+        tele.on_arrival(0.1 * k, ed)  # 10 arrivals in [0, 1)
+    phi = tele.arrival_rates(topo, now=1.0)
+    assert phi[ed] == pytest.approx(10.0, rel=0.01)
+    # 5 seconds later every one of them has left the window
+    phi_late = tele.arrival_rates(topo, now=6.0)
+    assert phi_late[ed] == 0.0
+
+
+def test_telemetry_effective_topology_substitutes_measurements(setup):
+    _, _, _, topo, _ = setup
+    tele = Telemetry(topo, TelemetryConfig(window_s=1.0))
+    e = 0
+    src, dst = int(topo.edge_src[e]), int(topo.edge_dst[e])
+    tele.on_transfer(0.1, src, dst, mb=1.0, wall=0.5)  # 2 MB/s
+    eff = tele.effective_topology(topo, now=0.2)
+    assert eff.edge_rate[e] == pytest.approx(2.0)
+    # untouched edges keep the view's rates
+    np.testing.assert_array_equal(eff.edge_rate[1:], topo.edge_rate[1:])
+    eff.validate()
+
+
+def test_telemetry_exit_fractions(setup):
+    _, _, _, topo, _ = setup
+    tele = Telemetry(topo, TelemetryConfig(window_s=10.0))
+    for stage in (2, 2, 2, 4):
+        tele.on_exit(0.5, stage)
+    frac = tele.exit_fractions(now=1.0)
+    assert frac[2] == pytest.approx(0.75)
+    assert frac[4] == pytest.approx(0.25)
+
+
+def test_straggler_estimates_surface_in_summary(setup, prompts):
+    eng = make_engine(setup)
+    stats = _serve(eng, prompts)
+    caps = stats.summary()["capacity_estimates"]
+    es = [int(v) for v in np.nonzero(eng.topo.node_stage > 0)[0]]
+    assert set(caps) == set(es)
+    # every replica that served work has a finite positive estimate near
+    # nameplate (no scenario: the environment IS the view)
+    for v, mu_hat in caps.items():
+        assert 0 < mu_hat < float("inf")
+
+
+# ---------------------------------------------------------------------------
+# scenarios
+# ---------------------------------------------------------------------------
+
+
+def test_slowdown_scenario_detected_and_reconfigured(setup, prompts):
+    eng = make_engine(setup)
+    victim = busiest_replica(eng.topo, eng.p)
+    span = len(prompts) / 60.0
+    scn = node_slowdown(eng.topo, 0.1 * span, 10 * span, factor=0.1, node=victim)
+    tele = Telemetry(eng.topo, TelemetryConfig(window_s=span / 6))
+    ctrl = ReconfigController(
+        tele, ControllerConfig(interval=span / 6, rounds=5, drift_deadband=0.2)
+    )
+    stats = _serve(eng, prompts, scenario=scn, controller=ctrl)
+    assert len(stats.delays) == len(prompts)
+    assert stats.num_reconfigs >= 1
+    caps = stats.summary()["capacity_estimates"]
+    # the straggler saw the throttle...
+    assert caps[victim] < 0.5 * float(eng.topo.mu[victim]) or caps[
+        victim
+    ] < 0.5 * float(eng.straggler.mu_hat[victim] / 0.1)
+    # ...but the optimizer's view was never mutated directly by the scenario
+    assert float(eng.topo.mu[victim]) > 0
+
+
+def test_scenario_view_isolation(setup, prompts):
+    """Scenario mutations hit a private copy: self.topo is untouched."""
+    eng = make_engine(setup)
+    mu_before = eng.topo.mu.copy()
+    span = len(prompts) / 60.0
+    scn = node_slowdown(eng.topo, 0.05 * span, 10 * span, factor=0.2, p=eng.p)
+    _serve(eng, prompts, scenario=scn)
+    np.testing.assert_array_equal(eng.topo.mu, mu_before)
+
+
+def test_failure_scenario_reroutes_and_completes(setup, prompts):
+    eng = make_engine(setup)
+    span = len(prompts) / 60.0
+    scn = get_scenario("failure", eng.topo, p=eng.p, horizon=span)
+    dead = scn.events[0].node
+    stats = _serve(eng, prompts, scenario=scn)
+    assert len(stats.delays) == len(prompts)  # nobody lost
+    assert dead not in set(eng.topo.edge_dst.tolist())  # view dropped it
+    # surviving strategy still sums to 1 per source
+    sums = np.zeros(eng.topo.num_nodes)
+    np.add.at(sums, eng.topo.edge_src, eng.p)
+    senders = np.unique(eng.topo.edge_src)
+    np.testing.assert_allclose(sums[senders], 1.0, atol=1e-6)
+
+
+def test_failure_scenario_rejected_for_cached_decode(setup, prompts):
+    eng = make_engine(setup)
+    scn = get_scenario("failure", eng.topo, p=eng.p, horizon=1.0)
+    with pytest.raises(ValueError):
+        _serve(eng, prompts, gen_len=3, decode_mode="cached", scenario=scn)
+
+
+def test_burst_scenario_modulates_arrivals(setup, prompts):
+    _, _, _, topo, _ = setup
+    scn = arrival_burst(topo, 1.0, 2.0, factor=4.0, ed_share=0.5, seed=0)
+    assert scn.modulates_arrivals and scn.modulates_eds
+    assert scn.arrival_factor(0.5) == 1.0
+    assert scn.arrival_factor(1.5) > 1.0
+    assert scn.arrival_factor(2.5) == 1.0
+    eng = make_engine(setup)
+    stats = _serve(eng, prompts, scenario=scn)
+    assert len(stats.delays) == len(prompts)
+
+
+def test_link_degradation_helper_scales_named_pairs(setup):
+    _, _, _, topo, _ = setup
+    pair = (int(topo.edge_src[3]), int(topo.edge_dst[3]))
+    out = with_link_degradation(topo, [pair, (999, 999)], 0.5)
+    assert out.edge_rate[3] == pytest.approx(topo.edge_rate[3] * 0.5)
+    untouched = np.ones(topo.num_edges, bool)
+    for i, (s, d) in enumerate(zip(topo.edge_src, topo.edge_dst)):
+        if (int(s), int(d)) == pair:
+            untouched[i] = False
+    np.testing.assert_array_equal(
+        out.edge_rate[untouched], topo.edge_rate[untouched]
+    )
+
+
+def test_scenario_event_apply_env_in_place(setup):
+    _, _, _, topo, _ = setup
+    env = dataclasses.replace(
+        topo, mu=topo.mu.copy(), phi_ext=topo.phi_ext.copy(),
+        edge_rate=topo.edge_rate.copy(),
+    )
+    scn = Scenario(name="x")
+    node = int(topo.nodes_at_stage(1)[0])
+    scn.apply_env(ScenarioEvent(0.0, "mu_scale", node=node, factor=0.5), env)
+    assert env.mu[node] == pytest.approx(topo.mu[node] * 0.5)
+    with pytest.raises(ValueError):
+        scn.apply_env(ScenarioEvent(0.0, "fail", node=node), env)
+
+
+# ---------------------------------------------------------------------------
+# threshold-aware batch packing
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_floor():
+    assert [pow2_floor(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == [
+        1, 2, 2, 4, 4, 4, 8, 8,
+    ]
+    with pytest.raises(ValueError):
+        pow2_floor(0)
+
+
+def _mk_req(rid, cls_conf=None, generated=0):
+    r = Request(rid=rid, tokens=np.arange(4), arrival=float(rid))
+    if cls_conf is not None:
+        r.last_conf[0] = cls_conf
+    r.generated = [1] * generated
+    return r
+
+
+def test_pack_decode_batch_groups_head_class_and_trims():
+    thr = np.asarray([0.5])
+    classify = ExitPredictor(lambda: thr, gen_len=8)
+    # head predicted to exit (conf near threshold); rows 2 and 4 match it
+    items = [
+        (0, _mk_req(0, cls_conf=0.6)),
+        (1, _mk_req(1, cls_conf=0.01, generated=1)),
+        (2, _mk_req(2, cls_conf=0.55)),
+        (3, _mk_req(3, cls_conf=0.02, generated=1)),
+        (4, _mk_req(4, cls_conf=0.9)),
+    ]
+    take, rest = pack_decode_batch(items, batch_size=4, classify=classify)
+    # 5 candidates -> cand [0,2,4,1] -> pow2 trim to 4: head class first
+    assert [it[0] for it in take] == [0, 2, 4, 1]
+    assert [it[0] for it in rest] == [3]
+    # fewer rows than batch_size: trim to the exact padded shape
+    take, rest = pack_decode_batch(items[:3], batch_size=8, classify=classify)
+    assert len(take) == 2  # pow2_floor(3)
+    assert [it[0] for it in rest] == [1]  # non-head-class row bumped
+
+
+def test_pack_decode_batch_head_never_starves():
+    classify = ExitPredictor(lambda: np.asarray([0.5]), gen_len=8)
+    items = [(i, _mk_req(i, cls_conf=0.01, generated=i % 3)) for i in range(6)]
+    take, _ = pack_decode_batch(items, batch_size=4, classify=classify)
+    assert take[0][0] == 0
+
+
+def test_threshold_policy_token_identical_and_no_extra_padding(setup):
+    eng = make_engine(setup)
+    rng = np.random.default_rng(5)
+    prompts = [
+        rng.integers(0, 128, size=int(rng.integers(8, 24))).astype(np.int32)
+        for _ in range(24)
+    ]
+    out = {}
+    for policy in ("fifo", "threshold"):
+        eng.rng = np.random.default_rng(11)
+        stats = eng.serve(
+            prompts,
+            arrival_rate=1e6,
+            batch_size=8,
+            gen_len=8,
+            decode_mode="cached",
+            num_slots=8,
+            batch_policy=policy,
+        )
+        out[policy] = (stats.sequences_by_rid(), stats.summary()["padded_row_frac"])
+    assert out["fifo"][0] == out["threshold"][0]
+    assert out["threshold"][1] <= out["fifo"][1]
+
+
+def test_bad_batch_policy_rejected(setup, prompts):
+    eng = make_engine(setup)
+    with pytest.raises(ValueError):
+        _serve(eng, prompts, batch_policy="lifo")
+
+
+# ---------------------------------------------------------------------------
+# simulator same-timestamp harvest
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_coalesce_results_identical():
+    from repro.core import dto_ee, simulator
+    from repro.core.types import RESNET101_PROFILE
+
+    profile = RESNET101_PROFILE
+    topo = build_edge_network(seed=0, profile=profile, arrival_rate_scale=5.0)
+    ep = synthetic_validation(seed=1, profile=profile)
+    res = dto_ee.run_configuration_phase(
+        topo, profile, ep, DtoHyperParams(rounds=20)
+    )
+    p, thr = np.asarray(res.state.carry.p), res.state.thresholds
+    a = simulator.simulate_slot(
+        topo, profile, ep, p, thr, duration=1.0, seed=5, coalesce=False
+    )
+    b = simulator.simulate_slot(
+        topo, profile, ep, p, thr, duration=1.0, seed=5, coalesce=True
+    )
+    assert a.mean_delay == b.mean_delay
+    assert a.completed == b.completed and a.generated == b.generated
+    np.testing.assert_array_equal(a.exit_fraction, b.exit_fraction)
+    np.testing.assert_array_equal(a.mean_delay_per_stage, b.mean_delay_per_stage)
