@@ -36,12 +36,18 @@ bench-control:
 # outputs agree (paged == dense bitwise with >= 2x in-flight at equal KV
 # bytes; fifo == threshold packing token-identical with no extra padding;
 # closed loop reconfigures with accuracy pinned) and the JSON schemas hold.
-# Outputs land in bench-artifacts/ so CI can upload them per PR.
+# Also emits a Perfetto trace of a small serve and gates it on the
+# check_trace.py span invariants.  Outputs land in bench-artifacts/ so CI
+# can upload them per PR.
 bench-smoke:
 	mkdir -p bench-artifacts
 	$(PYTHON) benchmarks/decode_throughput.py --smoke --out bench-artifacts/BENCH_decode_smoke.json
 	$(PYTHON) benchmarks/decode_throughput.py --smoke --cache-layout paged --out bench-artifacts/BENCH_paged_smoke.json
 	$(PYTHON) benchmarks/control_loop.py --smoke --out bench-artifacts/BENCH_control_smoke.json
+	$(PYTHON) -m repro.launch.serve --slots 1 --requests-per-slot 8 --gen-len 2 \
+		--trace-out bench-artifacts/trace_smoke.json \
+		--stats-report bench-artifacts/serve_report_smoke.json
+	$(PYTHON) tools/check_trace.py bench-artifacts/trace_smoke.json
 
 # syntax check of every tree (no third-party linter baked into the image;
 # swap in ruff/pyflakes here once available)

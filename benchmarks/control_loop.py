@@ -10,6 +10,10 @@ This benchmark runs that experiment against the REAL serving data plane:
     + a ReconfigController re-optimizing mid-serve (``closed``) — and mean
     delay, delay stddev, p95, and branch-accuracy-weighted expected accuracy
     are compared;
+  * a traced serve under the static configuration reports tail latency
+    (p50/p95/p99) and the measured queue/compute/comms delay attribution
+    against the DTO-EE model terms per node (span sums must reconcile with
+    reported delays exactly);
   * the threshold-aware batch policy is A/B'd against FIFO on a cached
     decode workload (padded-row waste, token-identical outputs);
   * the simulator's same-timestamp event harvest is measured before/after
@@ -186,6 +190,92 @@ def bench_closed_loop(
     }
 
 
+def bench_attribution(
+    params, cfg, topo, profile, ep, n_requests: int, rho: float, seed: int,
+    threshold: float,
+) -> dict:
+    """Traced serve under the static configuration: tail latency + measured
+    vs DTO-EE-model delay attribution (the gate that the model the optimizer
+    minimizes still describes the live engine)."""
+    from repro.core.queueing import node_remaining_ratio
+    from repro.obs import MetricsCollector, SpanTracer, attribution_report
+
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=12).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    caps = [
+        float(sum(topo.mu[v] for v in topo.nodes_at_stage(h))) / profile.alpha[h - 1]
+        for h in range(1, profile.num_stages + 1)
+    ]
+    rate = rho * min(caps)
+    eng = build_engine(params, cfg, topo, profile, ep, threshold, seed)
+    tracer, metrics = SpanTracer(), MetricsCollector()
+    eng.rng = np.random.default_rng(seed + 7)
+    stats = eng.serve(
+        prompts,
+        arrival_rate=rate,
+        batch_size=4,
+        gen_len=1,
+        tracer=tracer,
+        metrics=metrics,
+    )
+    s = stats.summary()
+    # the same I_node the optimizer saw: remaining ratios under the live
+    # thresholds broadcast onto nodes
+    I_node = np.asarray(
+        node_remaining_ratio(
+            eng.topo,
+            np.asarray(ep.evaluate(eng.thresholds).stage_remaining, np.float32),
+        )
+    )
+    rep = attribution_report(
+        tracer, eng.p, eng.topo, profile, I_node, stats
+    )
+    out = {
+        "workload": {
+            "n_requests": n_requests,
+            "arrival_rate": rate,
+            "utilization": rho,
+            "threshold": threshold,
+        },
+        "tail_latency_s": {
+            "p50": s["p50_delay"],
+            "p95": s["p95_delay"],
+            "p99": s["p99_delay"],
+            "mean": s["mean_delay"],
+        },
+        "delay_components_s": s["delay_components"],
+        "per_stage_components": s["per_stage_components"],
+        "attribution": rep,
+    }
+    mc = rep["measured"]
+    md = rep["model"]
+    print(
+        f"attribution: p50 {s['p50_delay']*1e3:.1f}ms  "
+        f"p95 {s['p95_delay']*1e3:.1f}ms  p99 {s['p99_delay']*1e3:.1f}ms  "
+        f"reconciles {rep['reconciles']} "
+        f"(max residual {rep['max_residual_s']:.2e}s)"
+    )
+    print(
+        f"  measured queue/compute/comms: "
+        f"{mc['queue_s']*1e3:.2f}/{mc['compute_s']*1e3:.2f}/"
+        f"{mc['comms_s']*1e3:.2f} ms   model: "
+        f"{md['queue_s']*1e3:.2f}/{md['compute_s']*1e3:.2f}/"
+        f"{md['comms_s']*1e3:.2f} ms"
+    )
+    for j, e in sorted(rep["per_node"].items()):
+        if e["visits"]:
+            print(
+                f"  node {j}: sojourn measured {e['measured_sojourn_s']*1e3:7.2f}ms  "
+                f"model {e['model_sojourn_s']*1e3:7.2f}ms  "
+                f"rel_err {e.get('rel_error', float('nan')):+.2f}  "
+                f"visits {e['visits']}"
+            )
+    return out
+
+
 def bench_packing(
     params, cfg, topo, profile, ep, n_requests: int, gen_len: int, seed: int,
     threshold: float = 0.1,
@@ -291,7 +381,12 @@ def bench_simulator(duration: float, arrival_scale: float, repeats: int) -> dict
 
 def validate_schema(payload: dict, smoke: bool) -> None:
     """The contract this benchmark (and ``bench-smoke``) is held to."""
-    assert "control" in payload and "packing" in payload and "simulator" in payload
+    assert (
+        "control" in payload
+        and "attribution" in payload
+        and "packing" in payload
+        and "simulator" in payload
+    )
     ctl = payload["control"]["by_scenario"]
     for name in SCENARIOS:
         for policy in ("static", "closed"):
@@ -305,6 +400,20 @@ def validate_schema(payload: dict, smoke: bool) -> None:
             f"{name}: closed-loop accuracy drifted "
             f"{ctl[name]['accuracy_delta']:+.4f} (> 1 point) from static"
         )
+    at = payload["attribution"]
+    assert at["attribution"]["reconciles"] is True, (
+        "span component sums do not reconcile with reported delays "
+        f"(max residual {at['attribution']['max_residual_s']:.2e}s)"
+    )
+    assert (
+        at["tail_latency_s"]["p50"]
+        <= at["tail_latency_s"]["p95"]
+        <= at["tail_latency_s"]["p99"]
+    )
+    assert at["attribution"]["per_node"], "attribution covered no ES node"
+    for comp in ("queue_s", "compute_s", "comms_s", "total_s"):
+        assert np.isfinite(at["attribution"]["measured"][comp])
+        assert np.isfinite(at["attribution"]["model"][comp])
     pk = payload["packing"]
     assert pk["tokens_identical"] is True, (
         "threshold-aware packing changed emitted tokens"
@@ -387,6 +496,10 @@ def main() -> None:
         "control": bench_closed_loop(
             params, cfg, topo, profile, ep, args.n_requests, args.rho,
             args.seed, args.controller_rounds, args.threshold,
+        ),
+        "attribution": bench_attribution(
+            params, cfg, topo, profile, ep, args.n_requests, args.rho,
+            args.seed, args.threshold,
         ),
         "packing": bench_packing(
             params, cfg, topo, profile, ep, pack_n, pack_gen, args.seed

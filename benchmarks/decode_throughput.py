@@ -6,6 +6,8 @@ both decode modes on one fixed workload (same prompts, same arrival process,
 same thresholds), asserts token-identical sequences and exit decisions
 between the modes AND against the monolithic ``model.prefill`` +
 ``model.decode_step`` reference, and measures wall-clock decode tokens/s.
+A traced run then joins measured per-stage wall time with the analytic
+roofline FLOP/byte counts into per-(stage, phase) utilization rows.
 Results land in ``BENCH_decode.json``.
 
 ``--cache-layout paged`` instead A/Bs the PAGED slot store against the dense
@@ -160,6 +162,67 @@ def bench_decode(
             "threshold": float(eng.thresholds[0]),
         },
         "by_gen_len": by_gen,
+    }
+
+
+def bench_roofline(
+    eng: CollaborativeEngine,
+    gen_len: int,
+    n_requests: int,
+    prompt_len: int,
+    batch_size: int,
+    arrival_rate: float,
+    serve_seed: int = 123,
+    num_slots: int | None = None,
+) -> dict:
+    """Measured-vs-roofline utilization of one traced cached-decode serve.
+
+    The tracer accumulates real wall seconds around every jitted stage
+    program (prefill and decode separately) plus the device work shipped;
+    joining with the analytic per-stage FLOP/byte counts turns that into a
+    per-(stage, phase) utilization against the hardware bound."""
+    from repro.obs import SpanTracer, roofline_utilization
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, eng.cfg.vocab_size, size=prompt_len).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    tracer = SpanTracer()
+    eng.rng = np.random.default_rng(serve_seed)
+    eng.serve(  # warmup/compile so wall times are steady-state
+        prompts,
+        arrival_rate=arrival_rate,
+        batch_size=batch_size,
+        gen_len=gen_len,
+        decode_mode="cached",
+        num_slots=num_slots,
+    )
+    eng.rng = np.random.default_rng(serve_seed)
+    eng.serve(
+        prompts,
+        arrival_rate=arrival_rate,
+        batch_size=batch_size,
+        gen_len=gen_len,
+        decode_mode="cached",
+        num_slots=num_slots,
+        tracer=tracer,
+    )
+    rows = roofline_utilization(tracer, eng.cfg)
+    for key, r in rows.items():
+        print(
+            f"roofline {key:18s}: wall {r['measured_wall_s']*1e3:8.2f}ms  "
+            f"bound {r['bound_s']*1e6:8.2f}us  util {r['utilization']:.2e}  "
+            f"calls {r['calls']:4d}  padded {r['padded_row_frac']*100:4.1f}%"
+        )
+    return {
+        "workload": {
+            "n_requests": n_requests,
+            "prompt_len": prompt_len,
+            "gen_len": gen_len,
+            "batch_size": batch_size,
+        },
+        "by_stage_phase": rows,
     }
 
 
@@ -341,6 +404,18 @@ def validate_schema(payload: dict) -> None:
             m = entry["by_mode"][mode]
             for field in ("wall_s", "tokens_per_s", "generated_tokens", "num_batches"):
                 assert np.isfinite(m[field]), f"{mode}.{field} not finite"
+    roof = payload["roofline"]["by_stage_phase"]
+    assert roof, "roofline join produced no (stage, phase) rows"
+    phases = {r["phase"] for r in roof.values()}
+    assert "prefill" in phases and "decode" in phases, (
+        f"roofline missing a phase: saw {sorted(phases)}"
+    )
+    for key, r in roof.items():
+        assert r["measured_wall_s"] > 0, f"{key}: no measured wall time"
+        assert r["bound_s"] > 0 and np.isfinite(r["utilization"]), (
+            f"{key}: degenerate roofline bound"
+        )
+        assert r["calls"] > 0 and r["device_tokens"] > 0
 
 
 def main() -> None:
@@ -422,7 +497,16 @@ def main() -> None:
         repeats=args.repeats,
         num_slots=args.num_slots,
     )
-    payload = {"decode": res, "meta": meta}
+    roofline_res = bench_roofline(
+        eng,
+        gen_len=max(args.gen_lens),
+        n_requests=args.n_requests,
+        prompt_len=args.prompt_len,
+        batch_size=args.batch_size,
+        arrival_rate=args.arrival_rate,
+        num_slots=args.num_slots,
+    )
+    payload = {"decode": res, "roofline": roofline_res, "meta": meta}
     validate_schema(payload)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -3,9 +3,11 @@
 Measures wall-clock tokens/s and simulated mean/p95 response delay of
 ``CollaborativeEngine.serve`` at micro-batch sizes {1, 8, 32} on one fixed
 workload (same prompts, same arrival process, same thresholds), checks that
-every batch size makes identical exit decisions, and times the vectorized
-discrete-event simulator on a ~1e4-task slot.  Results land in
-``BENCH_serving.json`` so the perf trajectory is tracked PR over PR.
+every batch size makes identical exit decisions, runs a tracing-overhead A/B
+(span tracer on vs off, identical seeds: bitwise-identical results, <3%
+tokens/s budget), and times the vectorized discrete-event simulator on a
+~1e4-task slot.  Results land in ``BENCH_serving.json`` so the perf
+trajectory is tracked PR over PR.
 
     PYTHONPATH=src python benchmarks/serving_throughput.py [--out BENCH_serving.json]
 """
@@ -122,6 +124,112 @@ def bench_engine(
     }
 
 
+def bench_tracing(
+    eng: CollaborativeEngine,
+    n_requests: int,
+    prompt_len: int,
+    arrival_rate: float,
+    batch_size: int = 8,
+    serve_seed: int = 123,
+    repeats: int = 5,
+    budget_frac: float = 0.03,
+) -> dict:
+    """Tracing-overhead A/B: tracer on vs off, identical seeds.
+
+    With observers disabled ``build_stream`` returns ``None`` and every
+    instrumentation site is a single ``is not None`` test, so the disabled
+    path must be BITWISE identical to the pre-observability engine — checked
+    here on exit decisions and delays.  With the tracer attached the budget
+    is <3% tokens/s regression; runs are interleaved and min-of-N (the
+    noise-robust wall estimator — medians on a shared box swing more than
+    the effect being measured).  The full tracer+metrics stack is recorded
+    as an extra row, ungated.
+
+    The default A/B prompt length (32) is deliberately longer than the main
+    throughput sweep's: per-event tracing cost is fixed, so the 4-token
+    workload — a dispatch-overhead stress test — would measure tracing
+    against artificially tiny per-batch compute rather than representative
+    stage work.
+    """
+    from repro.obs import MetricsCollector, SpanTracer
+
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, eng.cfg.vocab_size, size=prompt_len).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    modes = ("off", "tracer", "tracer+metrics")
+
+    def run(mode: str):
+        eng.rng = np.random.default_rng(serve_seed)
+        tracer = SpanTracer() if mode != "off" else None
+        metrics = MetricsCollector() if mode == "tracer+metrics" else None
+        t0 = time.perf_counter()
+        stats = eng.serve(
+            prompts,
+            arrival_rate=arrival_rate,
+            batch_size=batch_size,
+            tracer=tracer,
+            metrics=metrics,
+        )
+        return time.perf_counter() - t0, stats
+
+    run("off")  # warmup/compile
+    walls: dict[str, list[float]] = {m: [] for m in modes}
+    last: dict[str, object] = {}
+    for _ in range(repeats):
+        for m in modes:  # interleaved: drift hits every mode equally
+            w, last[m] = run(m)
+            walls[m].append(w)
+    wall = {m: float(np.min(walls[m])) for m in modes}
+    # disabled path == traced path: same exits, same delays, bit for bit
+    identical = all(
+        last["off"].by_rid() == last[m].by_rid()
+        and all(a == b for a, b in zip(last["off"].delays, last[m].delays))
+        for m in modes[1:]
+    )
+    n_done = last["off"].summary()["num_completed"]
+    overhead = {m: wall[m] / wall["off"] - 1.0 for m in modes[1:]}
+    res = {
+        "workload": {
+            "n_requests": n_requests,
+            "prompt_len": prompt_len,
+            "batch_size": batch_size,
+            "repeats": repeats,
+        },
+        "by_mode": {
+            m: {
+                "wall_s": wall[m],
+                "tokens_per_s": n_done / wall[m],
+                "overhead_frac": overhead.get(m, 0.0),
+            }
+            for m in modes
+        },
+        "budget_frac": budget_frac,
+        "within_budget": overhead["tracer"] <= budget_frac,
+        "results_bitwise_identical": identical,
+        "spans_recorded": sum(
+            len(v) for v in last["tracer"].trace.spans.values()
+        ),
+    }
+    for m in modes:
+        print(
+            f"tracing A/B {m:15s}: {n_done / wall[m]:8.1f} tok/s  "
+            f"overhead {overhead.get(m, 0.0) * 100:+.2f}%"
+        )
+    print(
+        f"tracing A/B: bitwise identical {identical}  "
+        f"spans {res['spans_recorded']}"
+    )
+    assert identical, "traced serve diverged from untraced serve"
+    if not res["within_budget"]:
+        print(
+            f"WARNING: tracer overhead {overhead['tracer'] * 100:.2f}% "
+            f"exceeds {budget_frac * 100:.0f}% budget"
+        )
+    return res
+
+
 def bench_simulator(arrival_rate_scale: float = 12.0, duration: float = 20.0) -> dict:
     """Vectorized discrete-event simulator on a heavily loaded slot."""
     profile = RESNET101_PROFILE
@@ -159,6 +267,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=4)
     ap.add_argument("--repeats", type=int, default=5)
     ap.add_argument(
+        "--ab-prompt-len",
+        type=int,
+        default=32,
+        help="prompt length for the tracing-overhead A/B (longer than the "
+        "throughput sweep's: fixed per-event tracing cost is measured "
+        "against representative per-batch compute)",
+    )
+    ap.add_argument(
         "--batch-sizes", type=int, nargs="+", default=[1, 8, 32]
     )
     ap.add_argument(
@@ -178,9 +294,17 @@ def main() -> None:
         args.arrival_rate,
         repeats=args.repeats,
     )
+    tracing_res = bench_tracing(
+        eng,
+        args.n_requests,
+        args.ab_prompt_len,
+        args.arrival_rate,
+        repeats=args.repeats,
+    )
     sim_res = bench_simulator()
     payload = {
         "engine": engine_res,
+        "tracing_overhead": tracing_res,
         "simulator": sim_res,
         "meta": {
             "jax": jax.__version__,

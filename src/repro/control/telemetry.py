@@ -2,8 +2,11 @@
 
 The serving engine emits one observation per event as its simulated clock
 advances — arrivals at end devices, stage batches (GFLOPs, wall seconds,
-queue depth), residual-stream transfers, and exit decisions.  This module
-folds those streams into sliding-window / EWMA estimators and can render
+queue depth), residual-stream transfers, and exit decisions.
+:class:`Telemetry` subscribes to the engine's instrumentation stream
+(:mod:`repro.obs.stream` — the same call sites that feed span tracing and
+metrics), consuming the hook subset it defines and folding the
+observations into sliding-window / EWMA estimators; it can render
 them as an *effective* :class:`~repro.core.types.Topology`: the optimizer's
 static profile with every measured quantity replaced by its live estimate.
 That effective topology is what the controller re-optimizes against — the
@@ -81,19 +84,20 @@ class Telemetry:
         serve start)."""
         self.monitor = monitor
 
-    # -- hooks (called by the engine) ---------------------------------------
+    # -- hooks (instrumentation-stream subscriber subset) --------------------
     def _seen(self, t: float) -> None:
         if self._t0 is None or t < self._t0:
             self._t0 = t
 
-    def on_arrival(self, t: float, node: int) -> None:
+    def on_arrival(self, t: float, node: int, rid: int = -1) -> None:
         self._seen(t)
         self._arr_seen = True
         heapq.heappush(self._arr_q, (t, int(node)))
         self._arr_count[int(node)] += 1
 
     def on_batch(
-        self, t: float, node: int, gflops: float, wall: float, queue_depth: int
+        self, t: float, node: int, gflops: float, wall: float,
+        queue_depth: int, **_,
     ) -> None:
         self._seen(t)
         node = int(node)
@@ -104,18 +108,22 @@ class Telemetry:
         self._qdepth_hat[node] = (1 - a) * self._qdepth_hat[node] + a * queue_depth
 
     def on_transfer(
-        self, t: float, src: int, dst: int, mb: float, wall: float
+        self, t0: float, t1: float, wall: float, src: int, dst: int,
+        rid: int = -1, mb: float = 0.0,
     ) -> None:
+        # ``wall`` is the modeled hop time (mb / edge_rate), passed explicitly
+        # rather than recomputed as t1 - t0: the estimator must see the exact
+        # float the engine charged, not its round-trip through the timeline
         if wall <= 0:
             return
-        self._seen(t)
+        self._seen(t1)
         key = (int(src), int(dst))
         rate = mb / wall
         prev = self._edge_hat.get(key)
         a = self.config.ewma_alpha
         self._edge_hat[key] = rate if prev is None else (1 - a) * prev + a * rate
 
-    def on_exit(self, t: float, stage: int) -> None:
+    def on_exit(self, t: float, rid: int, stage: int, conf: float = 0.0) -> None:
         self._seen(t)
         heapq.heappush(self._exit_q, (t, int(stage)))
         self._exit_count[int(stage)] += 1

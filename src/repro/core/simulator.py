@@ -203,6 +203,7 @@ def simulate_slot(
     warmup: float = 0.5,
     strategy_switch: tuple[float, np.ndarray] | None = None,
     coalesce: bool = True,
+    tracer=None,
 ) -> SimResult:
     """Simulate one task-offloading phase of ``duration`` seconds.
 
@@ -217,6 +218,14 @@ def simulate_slot(
     gulp (processing order — heap order at equal times — is unchanged, so
     results are identical); ``False`` keeps the one-pop-per-iteration loop
     for A/B measurement.
+
+    ``tracer`` (a :class:`repro.obs.trace.SpanTracer`) receives one span
+    tree per task with SIMULATED timestamps injected at each event — the
+    simulator has no clock of its own beyond the heap, so span times are the
+    exact event floats.  PS service is one ``compute`` span per hop
+    (``ps=True``: processor sharing interleaves, so the sojourn is not
+    separable into wait + service); transfers and retirements mirror the
+    serving engine's vocabulary.  ``None`` skips every emission.
     """
     rng = np.random.default_rng(seed)
     p = np.asarray(p, np.float64)
@@ -280,12 +289,22 @@ def simulate_slot(
         exits_here = False
         if b is not None:
             exits_here = exit_profile.conf[task.record, b] >= thresholds[b]
+        if tracer is not None:
+            tracer.add_span(
+                task.tid, "compute", task.t_enter_stage, now, node=node,
+                stage=h, ps=True,
+            )
         if h == H or exits_here:
             delays.append(now - task.arrival)
             branch = b if (exits_here and h < H) else len(exit_counts) - 1
             exit_counts[branch] += 1
             correct_flags.append(bool(exit_profile.correct[task.record, branch]))
             tasks.pop(task.tid, None)
+            if tracer is not None:
+                tracer.on_exit(
+                    now, task.tid, h,
+                    float(exit_profile.conf[task.record, branch]),
+                )
             return
         send(now, task, node)
 
@@ -297,6 +316,8 @@ def simulate_slot(
         t_cm = beta / float(topo.edge_rate[e])
         task.stage = h_next
         task.node = nxt
+        if tracer is not None:
+            tracer.on_transfer(now, now + t_cm, t_cm, node, nxt, task.tid, beta)
         heapq.heappush(heap, (now + t_cm, next(seq), 1, (task.tid, nxt)))
 
     # Arrivals stop at ``duration``; queues then drain so every generated
@@ -331,6 +352,10 @@ def simulate_slot(
                 )
                 generated += 1
                 tasks[task.tid] = task
+                if tracer is not None:
+                    # sim-time clock injection: the tracer's SimClock follows
+                    # the heap's event floats, not wall time
+                    tracer.on_submit(now, task.tid, int(ed), now)
                 send(now, task, ed)
             elif kind == 1:
                 tid, node = payload

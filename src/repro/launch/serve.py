@@ -12,10 +12,20 @@ Two control-plane modes:
     long serve during which telemetry feeds a ReconfigController that
     re-optimizes p/thresholds every R simulated seconds while a scenario
     perturbs the live environment.
+
+Observability flags (see src/repro/serving/README.md, "Observability"):
+
+  * ``--trace-out trace.json`` — attach a SpanTracer and write the serve as
+    Chrome-trace/Perfetto JSON (open at https://ui.perfetto.dev).  Slotted
+    mode traces the LAST slot (one trace file, one serve).
+  * ``--stats-report report.json`` — write the machine-readable
+    ``ServeStats.report()`` (summary + per-request delay decomposition +
+    metrics registry snapshot) of the traced serve.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -37,6 +47,27 @@ from repro.core.types import DtoHyperParams
 from repro.data import RequestConfig, poisson_requests
 from repro.models import model as model_lib
 from repro.serving import CollaborativeEngine
+
+
+def _observers(args):
+    """(tracer, metrics) when an observability flag asked for them."""
+    if args.trace_out is None and args.stats_report is None:
+        return None, None
+    from repro.obs import MetricsCollector, SpanTracer
+
+    return SpanTracer(), MetricsCollector()
+
+
+def _write_obs(args, stats) -> None:
+    if args.trace_out and stats.trace is not None:
+        from repro.obs import write_chrome_trace
+
+        write_chrome_trace(args.trace_out, stats.trace)
+        print(f"trace: {args.trace_out}", flush=True)
+    if args.stats_report:
+        with open(args.stats_report, "w") as f:
+            json.dump(stats.report(), f, indent=1)
+        print(f"stats report: {args.stats_report}", flush=True)
 
 
 def main() -> None:
@@ -132,6 +163,20 @@ def main() -> None:
         "batches to exact padded shapes; token-identical outputs, lower "
         "padded-row waste",
     )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        metavar="PATH",
+        help="write a Chrome-trace/Perfetto JSON of the serve (the last "
+        "slot in slotted mode) to PATH",
+    )
+    ap.add_argument(
+        "--stats-report",
+        default=None,
+        metavar="PATH",
+        help="write the machine-readable ServeStats.report() JSON (summary "
+        "+ delay decomposition + metrics) of the traced serve to PATH",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -188,6 +233,7 @@ def main() -> None:
                 args.scenario, engine.topo, p=engine.p, horizon=span,
                 seed=args.seed,
             )
+        tracer, metrics = _observers(args)
         stats = engine.serve(
             prompts,
             duration=horizon,
@@ -195,6 +241,8 @@ def main() -> None:
             scenario=scenario,
             controller=controller,
             telemetry=telemetry,
+            tracer=tracer,
+            metrics=metrics,
             **serve_kw,
         )
         s = stats.summary()
@@ -211,17 +259,25 @@ def main() -> None:
             flush=True,
         )
         print(f"capacity estimates (GFLOP/s): {cap}")
+        _write_obs(args, stats)
         print("done")
         return
 
+    stats = None
     for slot in range(args.slots):
         engine.configuration_phase()
         reqs = poisson_requests(cfg, rcfg, args.slot_seconds)
         prompts = [tok for _, tok in reqs][: args.requests_per_slot]
+        # observability rides on the LAST slot only: one trace, one serve
+        tracer, metrics = (
+            _observers(args) if slot == args.slots - 1 else (None, None)
+        )
         stats = engine.serve(
             prompts,
             duration=args.slot_seconds,
             arrival_rate=rcfg.arrival_rate,
+            tracer=tracer,
+            metrics=metrics,
             **serve_kw,
         )
         s = stats.summary()
@@ -244,6 +300,8 @@ def main() -> None:
         # dynamic environment: replicas throttle between slots (paper §4.3)
         engine.update_topology(with_resampled_capacities(engine.topo, rng))
 
+    if stats is not None:
+        _write_obs(args, stats)
     print("done")
 
 

@@ -33,6 +33,8 @@ class Request:
     hidden: Any = None  # residual stream handed between stages
     exited: bool = False
     exit_stage: int = -1
+    # execution attempts: 1 + number of fail-stop re-executions from the ED
+    attempts: int = 1
     output_token: int = -1
     confidence: float = 0.0
     t_done: float = 0.0

@@ -57,6 +57,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
+from time import perf_counter
 from typing import Any
 
 import numpy as np
@@ -82,6 +83,7 @@ from repro.serving.batching import (
     padded_batch_size,
     pow2_floor,
 )
+from repro.obs.stream import build_stream
 from repro.serving.paging import BlockAllocator
 
 
@@ -238,6 +240,10 @@ class ServeStats:
     reconfig_times: list = dataclasses.field(default_factory=list)
     resubmitted: int = 0
     capacity_estimates: dict = dataclasses.field(default_factory=dict)
+    # observability: the SpanTracer / MetricsCollector attached to the serve
+    # (None when tracing was off — the zero-cost path)
+    trace: Any = None
+    metrics: Any = None
 
     def summary(self) -> dict:
         d = np.asarray(self.delays)
@@ -246,11 +252,13 @@ class ServeStats:
         makespan = (
             float(max(self.dones) - min(self.arrivals)) if self.dones else float("nan")
         )
-        return {
+        out = {
             "num_completed": int(d.size),
             "mean_delay": float(d.mean()) if d.size else float("nan"),
             "delay_std": float(d.std()) if d.size else float("nan"),
+            "p50_delay": float(np.percentile(d, 50)) if d.size else float("nan"),
             "p95_delay": float(np.percentile(d, 95)) if d.size else float("nan"),
+            "p99_delay": float(np.percentile(d, 99)) if d.size else float("nan"),
             "exit_histogram": {
                 int(s): int((es == s).sum()) for s in np.unique(es)
             },
@@ -292,6 +300,26 @@ class ServeStats:
             "resubmitted": self.resubmitted,
             "capacity_estimates": dict(self.capacity_estimates),
         }
+        if self.trace is not None:
+            from repro.obs.attribution import decompose
+
+            dec = decompose(self.trace, self)
+            out["delay_components"] = dec["mean_components_s"]
+            out["per_stage_components"] = dec["per_stage"]
+        return out
+
+    def report(self) -> dict:
+        """Machine-readable serve report: the summary plus, when a tracer
+        was attached, the full per-request delay decomposition and, when a
+        metrics collector was attached, its registry snapshot."""
+        out = {"summary": self.summary()}
+        if self.trace is not None:
+            from repro.obs.attribution import decompose
+
+            out["decomposition"] = decompose(self.trace, self)
+        if self.metrics is not None:
+            out["metrics"] = self.metrics.snapshot()
+        return out
 
     def by_rid(self) -> dict[int, tuple[int, int]]:
         """rid -> (exit_stage, token); completion-order independent view."""
@@ -420,6 +448,8 @@ class CollaborativeEngine:
         controller=None,
         scenario=None,
         telemetry=None,
+        tracer=None,
+        metrics=None,
     ) -> ServeStats:
         """Serve ``prompts`` arriving as a Poisson stream.
 
@@ -465,6 +495,21 @@ class CollaborativeEngine:
             its hook methods) receiving per-arrival / per-batch /
             per-transfer / per-exit observations as the simulated clock
             advances.
+
+        Observability (``repro.obs``): ``telemetry``, ``tracer`` and
+        ``metrics`` all subscribe to ONE instrumentation stream — a single
+        set of emission points on the engine's hot paths
+        (:mod:`repro.obs.stream`).  ``tracer`` (a ``SpanTracer``) builds one
+        span tree per request tiling ``[arrival, retirement]`` exactly —
+        admission wait, per-hop transfer, queue wait, batch-formation wait,
+        stage compute — plus instants and counter samples, and accumulates
+        REAL wall-clock per stage program for the roofline join.
+        ``metrics`` (a ``MetricsCollector``) feeds a metrics registry
+        (p50/p95/p99 delay, batch occupancy, pool occupancy, realized exit
+        pairs).  With none attached the stream is ``None`` and every
+        emission site is skipped — the disabled path is bitwise identical
+        and overhead-free.  Attached observers land on ``stats.trace`` /
+        ``stats.metrics`` for ``ServeStats.report()`` and the exporters.
           * ``controller`` — a ``ReconfigController``; every
             ``controller.interval`` sim-seconds it plans a reconfiguration
             from the telemetry's measured topology and, after the plan's
@@ -581,8 +626,14 @@ class CollaborativeEngine:
         )
         if shared_monitor:
             telemetry.attach_monitor(self.straggler)
+        # every observer subscribes to one instrumentation stream; None when
+        # nothing is attached, so the disabled path skips every emission
+        stream = build_stream(telemetry, tracer, metrics)
+        wants_wall = stream is not None and stream.wants_wall
 
         stats = ServeStats()
+        stats.trace = tracer
+        stats.metrics = metrics
         # one precomputed CDF serves every routing sample (shared with the
         # simulator); the controller's installs and node failures rebuild it
         route = RoutingCdf(topo, self.p)
@@ -654,6 +705,7 @@ class CollaborativeEngine:
 
         def run_prefill(node: int, reqs: list[Request], now: float) -> None:
             nonlocal live_reqs
+            wall_t0 = perf_counter() if wants_wall else 0.0
             h = int(topo.node_stage[node])
             # stateless decode passes run at a FIXED padded length: causal
             # masking makes the pad rows inert, the valid rows stay bitwise
@@ -678,6 +730,7 @@ class CollaborativeEngine:
                     wtab = np.full(
                         (int(x.shape[0]), n_logical), trash_block, np.int32
                     )
+                    batch_hits = batch_total = 0
                     for i, r in enumerate(reqs):
                         res = alloc.alloc(r.tokens.tolist())
                         assert res is not None, (
@@ -692,12 +745,19 @@ class CollaborativeEngine:
                             # rewrite them (other rows read them); redirect
                             # the write to the trash block
                             wtab[i, j] = trash_block if shared else blk
-                        stats.prefix_hit_blocks += sum(res.shared)
-                        stats.prefix_total_blocks += len(res.table)
+                        batch_hits += sum(res.shared)
+                        batch_total += len(res.table)
+                    stats.prefix_hit_blocks += batch_hits
+                    stats.prefix_total_blocks += batch_total
                     pool_store[node], state_store[node] = programs.paged_slot_write(
                         h, pool_store[node], state_store[node], caches, wtab, slots
                     )
                     stats.block_occupancy.append(alloc.used_fraction)
+                    if stream is not None:
+                        stream.on_pool(
+                            now, node, alloc.used_fraction,
+                            batch_hits, batch_total,
+                        )
                 else:
                     slot_store[node] = programs.slot_write(
                         h, slot_store[node], caches, slots
@@ -707,9 +767,13 @@ class CollaborativeEngine:
             last = (
                 int(reqs[0].all_tokens().shape[0]) if stateless_decode else None
             )
-            finish_pass(node, reqs, x, now, h, is_decode_pass=False, last_valid=last)
+            finish_pass(
+                node, reqs, x, now, h, is_decode_pass=False, last_valid=last,
+                wall_t0=wall_t0,
+            )
 
         def run_decode(node: int, reqs: list[Request], now: float) -> None:
+            wall_t0 = perf_counter() if wants_wall else 0.0
             h = int(topo.node_stage[node])
             B = len(reqs)
             Bp = padded_batch_size(B, batch_size)
@@ -753,11 +817,13 @@ class CollaborativeEngine:
                     max_len,
                 )
                 stats.block_occupancy.append(alloc.used_fraction)
+                if stream is not None:
+                    stream.on_pool(now, node, alloc.used_fraction)
             else:
                 x, slot_store[node] = programs.stage_decode(
                     h, x_in, slot_store[node], slots
                 )
-            finish_pass(node, reqs, x, now, h, is_decode_pass=True)
+            finish_pass(node, reqs, x, now, h, is_decode_pass=True, wall_t0=wall_t0)
 
         def finish_pass(
             node: int,
@@ -767,6 +833,7 @@ class CollaborativeEngine:
             h: int,
             is_decode_pass: bool,
             last_valid: int | None = None,
+            wall_t0: float = 0.0,
         ) -> None:
             """Shared tail of a stage batch: heads, handoff buffers, clock.
 
@@ -803,7 +870,8 @@ class CollaborativeEngine:
             else:
                 gflops = len(reqs) * profile.alpha[h - 1]
             service = gflops / float(topo.mu[node])
-            done = max(now, busy_until[node]) + service
+            start = max(now, busy_until[node])
+            done = start + service
             busy_until[node] = done
             # every batch is a capacity measurement: the EWMA follows the
             # replica's TRUE (possibly scenario-perturbed) rate, feeding the
@@ -812,13 +880,24 @@ class CollaborativeEngine:
             # when no telemetry shares it)
             if not shared_monitor:
                 self.straggler.observe(node, gflops, service)
-            if telemetry is not None:
-                telemetry.on_batch(
+            if stream is not None:
+                # by this point the heads/handoff buffers were pulled to
+                # host, so the real stage programs have completed — the
+                # perf_counter delta is honest device+dispatch wall time
+                stream.on_batch(
                     done,
                     node,
                     gflops,
                     service,
                     len(pending[node]) + len(decode_q[node]),
+                    stage=h,
+                    rids=tuple(r.rid for r in reqs),
+                    t_dispatch=now,
+                    t_start=start,
+                    n_rows=int(x.shape[0]),
+                    n_tokens=int(x.shape[0]) * int(x.shape[1]),
+                    is_decode=is_decode_pass,
+                    wall_clock_s=(perf_counter() - wall_t0) if wants_wall else 0.0,
                 )
             heapq.heappush(
                 heap, (done, next(seq), 1, (node, reqs, conf, tok, is_decode_pass))
@@ -911,6 +990,8 @@ class CollaborativeEngine:
             h = int(topo.node_stage[node])
             req.node = node
             req.stage = h
+            if stream is not None:
+                stream.on_enqueue(now, req.rid, node)
             if req.phase == "decode" and cached:
                 decode_q[node].append((next(wait_seq), req))
             else:
@@ -938,8 +1019,8 @@ class CollaborativeEngine:
             stats.gen_tokens.append(tuple(req.generated))
             stats.arrivals.append(req.arrival)
             stats.dones.append(done)
-            if telemetry is not None:
-                telemetry.on_exit(done, h)
+            if stream is not None:
+                stream.on_exit(done, req.rid, h, c)
             if cached and req.slots:
                 live_reqs -= 1
                 freed = list(req.slots.items())
@@ -967,19 +1048,25 @@ class CollaborativeEngine:
             nxt, e = route.sample(self.rng, req.ed)
             req.path[1] = (nxt, int(e))
             t_cm = profile.beta[0] / float(topo.edge_rate[e])
-            if telemetry is not None:
-                telemetry.on_transfer(t + t_cm, req.ed, nxt, profile.beta[0], t_cm)
+            if stream is not None:
+                stream.on_submit(t, req.rid, req.ed, req.arrival)
+                stream.on_transfer(
+                    t, t + t_cm, t_cm, req.ed, nxt, req.rid, profile.beta[0]
+                )
             heapq.heappush(heap, (t + t_cm, next(seq), 0, (req, nxt)))
 
         def resubmit(req: Request, now: float) -> None:
             """Fail-stop re-execution: a task resident on (or in flight to) a
             failed replica restarts from scratch at its source ED."""
             stats.resubmitted += 1
+            req.attempts += 1
             req.phase = "prefill"
             req.hidden = None
             req.generated.clear()
             req.path.clear()
             req.last_conf.clear()
+            if stream is not None:
+                stream.on_resubmit(now, req.rid)
             submit(req, now)
 
         for i, (t, prompt) in enumerate(zip(arrivals, prompts)):
@@ -1044,8 +1131,8 @@ class CollaborativeEngine:
                         route = RoutingCdf(topo, self.p)
                         dead_nodes.add(dead)
                         self.straggler.mu_hat[dead] = 1e-9
-                        if telemetry is not None:
-                            telemetry.on_failure(now, dead)
+                        if stream is not None:
+                            stream.on_failure(now, dead)
                         # tasks queued at the dead replica re-execute from
                         # their source EDs (in-service and in-flight ones are
                         # caught at their event pops via ``dead_nodes``)
@@ -1091,8 +1178,8 @@ class CollaborativeEngine:
                 if node in dead_nodes:
                     resubmit(req, now)
                     continue
-                if telemetry is not None and req.stage == 0:
-                    telemetry.on_arrival(req.arrival, req.ed)
+                if stream is not None and req.stage == 0:
+                    stream.on_arrival(req.arrival, req.ed, req.rid)
                 enqueue(req, node, now)
                 continue
             # kind 1: batch done — batched exit decision already on device
@@ -1120,6 +1207,15 @@ class CollaborativeEngine:
                         / float(topo.edge_rate[e1])
                         / req.prompt_len
                     )
+                    if stream is not None:
+                        # telemetry never saw this hop pre-refactor (the
+                        # modeled per-token payload is not a fresh link
+                        # observation), so it is a distinct event the
+                        # tracer consumes and the estimators ignore
+                        stream.on_loopback(
+                            now, now + t_cm, node, node1, req.rid,
+                            profile.beta[0] / req.prompt_len,
+                        )
                     heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, node1)))
                     continue
                 if b is not None:
@@ -1140,13 +1236,15 @@ class CollaborativeEngine:
                 t_cm = profile.beta[h] / float(topo.edge_rate[e])
                 if is_decode_pass:
                     t_cm /= req.prompt_len
-                if telemetry is not None:
-                    telemetry.on_transfer(
+                if stream is not None:
+                    stream.on_transfer(
+                        now,
                         now + t_cm,
+                        t_cm,
                         node,
                         nxt,
+                        req.rid,
                         profile.beta[h] / (req.prompt_len if is_decode_pass else 1),
-                        t_cm,
                     )
                 heapq.heappush(heap, (now + t_cm, next(seq), 0, (req, nxt)))
             dispatch(node, now)

@@ -94,6 +94,19 @@ class BlockAllocator:
     def used_fraction(self) -> float:
         return self.used_blocks / self.num_blocks
 
+    def occupancy_stats(self) -> dict:
+        """Pool-accounting snapshot for the instrumentation stream /
+        metrics registry (JSON-able, O(sequences))."""
+        shared = sum(1 for r in self._ref if r > 1)
+        return {
+            "num_blocks": self.num_blocks,
+            "used_blocks": self.used_blocks,
+            "free_blocks": self.free_blocks,
+            "used_fraction": self.used_fraction,
+            "shared_blocks": shared,
+            "live_sequences": len(self._tables),
+        }
+
     def refcount(self, block: int) -> int:
         return self._ref[block]
 

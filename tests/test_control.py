@@ -197,7 +197,9 @@ def test_telemetry_effective_topology_substitutes_measurements(setup):
     tele = Telemetry(topo, TelemetryConfig(window_s=1.0))
     e = 0
     src, dst = int(topo.edge_src[e]), int(topo.edge_dst[e])
-    tele.on_transfer(0.1, src, dst, mb=1.0, wall=0.5)  # 2 MB/s
+    # 1.0 MB charged 0.5 s of hop time -> 2 MB/s (wall passed explicitly:
+    # the stream's t0/t1 delimit the span, wall is the modeled hop time)
+    tele.on_transfer(-0.4, 0.1, 0.5, src, dst, mb=1.0)
     eff = tele.effective_topology(topo, now=0.2)
     assert eff.edge_rate[e] == pytest.approx(2.0)
     # untouched edges keep the view's rates
@@ -208,8 +210,8 @@ def test_telemetry_effective_topology_substitutes_measurements(setup):
 def test_telemetry_exit_fractions(setup):
     _, _, _, topo, _ = setup
     tele = Telemetry(topo, TelemetryConfig(window_s=10.0))
-    for stage in (2, 2, 2, 4):
-        tele.on_exit(0.5, stage)
+    for rid, stage in enumerate((2, 2, 2, 4)):
+        tele.on_exit(0.5, rid, stage)
     frac = tele.exit_fractions(now=1.0)
     assert frac[2] == pytest.approx(0.75)
     assert frac[4] == pytest.approx(0.25)
@@ -430,3 +432,78 @@ def test_simulator_coalesce_results_identical():
     assert a.completed == b.completed and a.generated == b.generated
     np.testing.assert_array_equal(a.exit_fraction, b.exit_fraction)
     np.testing.assert_array_equal(a.mean_delay_per_stage, b.mean_delay_per_stage)
+
+
+# ---------------------------------------------------------------------------
+# observability riding the control plane (stream refactor equivalence)
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_unchanged_by_stream_cohabitation(setup, prompts):
+    """Telemetry subscribed to the instrumentation stream must estimate
+    exactly what it did as the engine's only observer: adding a tracer and
+    metrics collector to the same stream may not perturb a single estimate
+    (same events, same floats) nor the serve itself."""
+    from repro.obs import MetricsCollector, SpanTracer
+
+    span = len(prompts) / 60.0
+    tele_ref = Telemetry(make_engine(setup).topo, TelemetryConfig(window_s=span))
+    eng = make_engine(setup)
+    ref = _serve(eng, prompts, telemetry=tele_ref)
+
+    tele = Telemetry(make_engine(setup).topo, TelemetryConfig(window_s=span))
+    eng2 = make_engine(setup)
+    stats = _serve(
+        eng2, prompts, telemetry=tele,
+        tracer=SpanTracer(), metrics=MetricsCollector(),
+    )
+
+    # the serve is bitwise identical
+    assert stats.sequences_by_rid() == ref.sequences_by_rid()
+    np.testing.assert_array_equal(stats.delays, ref.delays)
+    # every estimator saw the same observations
+    now = span * 2
+    eff_ref = tele_ref.effective_topology(eng.topo, now)
+    eff = tele.effective_topology(eng2.topo, now)
+    np.testing.assert_array_equal(eff.mu, eff_ref.mu)
+    np.testing.assert_array_equal(eff.phi_ext, eff_ref.phi_ext)
+    np.testing.assert_array_equal(eff.edge_rate, eff_ref.edge_rate)
+    np.testing.assert_array_equal(
+        tele.exit_fractions(now), tele_ref.exit_fractions(now)
+    )
+    np.testing.assert_array_equal(
+        tele.queue_depths(), tele_ref.queue_depths()
+    )
+
+
+def test_failure_scenario_spans_stay_closed(setup, prompts):
+    """Fail-stop re-execution: every re-executed request's span tree still
+    tiles [arrival, retirement] exactly — the pre-failure wait shows up as
+    lost time, attempts counts the re-executions, and the component sums
+    still reconcile with the reported delays."""
+    from repro.obs import SpanTracer, decompose
+
+    eng = make_engine(setup)
+    span = len(prompts) / 60.0
+    scn = get_scenario("failure", eng.topo, p=eng.p, horizon=span)
+    tracer = SpanTracer()
+    # arrivals 4x faster than the scenario horizon assumes: the victim
+    # replica is guaranteed to hold queued work at the failure instant, so
+    # the run exercises re-execution (at the default 60/s it can drain first)
+    stats = _serve(eng, prompts, scenario=scn, tracer=tracer, arrival_rate=240.0)
+    assert len(stats.delays) == len(prompts)  # nobody lost
+
+    for rid in stats.rids:
+        assert tracer.check_tree(rid) == []
+    dec = decompose(tracer, stats)
+    assert dec["reconciles"], f"max residual {dec['max_residual_s']}"
+    assert dec["num_requests"] == len(prompts)
+    # at least one request rode through the failure: re-executed, with the
+    # abandoned wait accounted as lost time
+    resub = [rid for rid, n in tracer.attempts.items() if n > 1]
+    assert stats.resubmitted > 0 and len(resub) == stats.resubmitted
+    lost = {e["rid"]: e["lost"] for e in dec["per_request"]}
+    assert any(lost[rid] > 0 for rid in resub)
+    # failure + re-execution instants made it into the event log
+    kinds = {i["kind"] for i in tracer.instants}
+    assert "failure" in kinds and "resubmit" in kinds

@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""Validate a Chrome-trace/Perfetto JSON file emitted by the serving engine.
+
+    python tools/check_trace.py trace.json [more.json ...]
+
+Checks the Trace Event Format schema and the engine's span invariants
+(non-negative durations, no unclosed B/E spans, per-request tracks monotone
+and non-overlapping) via :func:`repro.obs.export.validate_chrome_trace`.
+Exit code 0 when every file passes, 1 otherwise — the CI gate behind
+``make bench-smoke``'s trace artifact.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.export import validate_chrome_trace  # noqa: E402
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_trace.py TRACE.json [TRACE.json ...]")
+        return 2
+    failed = False
+    for path in argv:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable ({e})")
+            failed = True
+            continue
+        errs = validate_chrome_trace(payload)
+        if errs:
+            failed = True
+            print(f"{path}: {len(errs)} violation(s)")
+            for e in errs[:20]:
+                print(f"  {e}")
+            if len(errs) > 20:
+                print(f"  ... and {len(errs) - 20} more")
+        else:
+            n = len(payload["traceEvents"])
+            print(f"{path}: OK ({n} events)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
